@@ -1,0 +1,51 @@
+"""Shared crawl-benchmark driver."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run_crawl(cfg, steps, *, classify_accuracy=0.9, mesh=None,
+              events=None):
+    """Drive a crawl for `steps`; returns (fetched urls, state, per-step
+    fetch counts, wall seconds). `events` maps step -> callable(state)."""
+    import jax
+    from repro.core import crawler as CR
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = mesh or make_host_mesh()
+    init, step_f, step_d = CR.make_spmd_crawler(
+        cfg, mesh, classify_accuracy=classify_accuracy)
+    state = init()
+    fetched, per_step = [], []
+    t0 = time.time()
+    for t in range(steps):
+        if events and t in events:
+            state = events[t](state)
+        fn = step_d if (t + 1) % cfg.dispatch_interval == 0 else step_f
+        state, rep = fn(state)
+        m = np.asarray(rep.fetched_mask)
+        per_step.append(int(m.sum()))
+        fetched.append(np.asarray(rep.fetched_urls)[m])
+    urls = np.concatenate(fetched) if fetched else np.array([], np.uint32)
+    return urls, state, np.asarray(per_step), time.time() - t0
+
+
+def stats_dict(state):
+    from repro.core import crawler as CR
+    s = np.asarray(state.stats).sum(0)
+    return {n: int(v) for n, v in zip(CR.STATS, s)}
+
+
+def overlap_metrics(urls, cfg):
+    import jax.numpy as jnp
+    from repro.core import webgraph as W
+    if len(urls) == 0:
+        return dict(url_dup=0.0, content_dup=0.0, fetched=0)
+    canon = np.asarray(W.canonical(jnp.asarray(urls.astype(np.uint32)), cfg))
+    return dict(
+        fetched=len(urls),
+        url_dup=1.0 - len(np.unique(urls)) / len(urls),
+        content_dup=1.0 - len(np.unique(canon)) / len(canon),
+    )

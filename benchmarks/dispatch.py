@@ -1,0 +1,38 @@
+"""C5 — batched vs immediate URL exchange: rounds, bytes moved, drops.
+
+The paper's claim: exchanging URLs in batches cuts the per-URL exchange
+overhead. Here the measurable costs are collective rounds (launch overhead)
+and total exchanged URLs; the trade-off is staging-buffer drops + frontier
+latency.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.crawl_common import overlap_metrics, run_crawl, stats_dict
+
+
+def main(steps: int = 48):
+    from repro.configs import get_arch
+    from repro.configs.base import scaled
+
+    base = scaled(get_arch("webparf")[0], n_domains=32, frontier_capacity=512,
+                  fetch_batch=32, bloom_bits_log2=16, dispatch_capacity=4096,
+                  url_space_log2=24)
+    print("\n== C5: dispatch batching interval sweep ==")
+    print(f"{'interval':>8s} {'rounds':>7s} {'sent':>8s} {'recv':>8s} "
+          f"{'sent/round':>10s} {'staging_drop':>12s} {'fetched':>8s}")
+    for interval in (1, 2, 4, 8, 16):
+        cfg = scaled(base, dispatch_interval=interval)
+        urls, state, _, _ = run_crawl(cfg, steps)
+        s = stats_dict(state)
+        rounds = max(s["dispatch_rounds"], 1)
+        print(f"{interval:8d} {s['dispatch_rounds']:7d} {s['dispatch_sent']:8d} "
+              f"{s['dispatch_recv']:8d} {s['dispatch_sent']/rounds:10.1f} "
+              f"{s['staging_drop']:12d} {len(urls):8d}")
+    print("(same discovered volume exchanged in fewer, larger rounds; "
+          "launch overhead amortizes linearly with the interval)")
+
+
+if __name__ == "__main__":
+    main()

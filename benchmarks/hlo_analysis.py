@@ -1,0 +1,335 @@
+"""Post-SPMD HLO analysis: collective bytes, dot FLOPs, HBM traffic estimate.
+
+``compiled.cost_analysis()`` does not expose collective traffic and visits
+while-loop bodies ONCE (scan-over-layers would be undercounted ~n_layers x),
+so this module re-derives the three roofline numerators from the compiled
+HLO text directly:
+
+  * builds the computation call graph (entry -> while bodies / conditions,
+    fusions, calls), with a trip-count multiplier for every while loop
+    (parsed from the largest loop-bound constant in its condition);
+  * resolves operand shapes through a per-computation symbol table (compiled
+    HLO prints operands in short form, without inline shapes);
+  * collective_bytes = sum over {all-gather, all-reduce, reduce-scatter,
+    all-to-all, collective-permute} of OPERAND bytes x loop multiplier;
+  * flops = 2 * numel(result) * contraction_size for every dot x multiplier;
+  * hbm_bytes = operand+result bytes of top-level (fusion-boundary)
+    instructions x multiplier — an upper estimate of HBM traffic, since
+    intra-fusion values never leave registers/VMEM.
+
+These are PER-PARTITION numbers (the compiled module is the per-device
+program), which is exactly what the per-chip roofline wants.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_OP_RE = re.compile(r"^\(?[^=]*?([\w\-]+)\(")
+
+
+Shape = Tuple[str, str]          # (dtype, "d0,d1,...")
+
+
+def _shape_bytes(shapes: List[Shape]) -> int:
+    total = 0
+    for dtype, dims in shapes:
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dtype, 4)
+    return total
+
+
+def _numel(dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+class Instr:
+    __slots__ = ("name", "op", "shapes", "operands", "refs", "line")
+
+    def __init__(self, name, op, shapes, operands, refs, line):
+        self.name = name            # %foo.1
+        self.op = op                # dot / fusion / while / ...
+        self.shapes = shapes        # result shapes [(dtype, dims), ...]
+        self.operands = operands    # operand %names
+        self.refs = refs            # [(kind, computation_name)]
+        self.line = line
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.instrs: List[Instr] = []
+        self.table: Dict[str, List[Shape]] = {}
+
+
+def _parse_refs(line: str):
+    out = []
+    for key in ("body=", "condition=", "to_apply=", "calls="):
+        m = re.search(re.escape(key) + r"(%?[\w\.\-]+)", line)
+        if m:
+            out.append((key[:-1], m.group(1).lstrip("%")))
+        m2 = re.search(re.escape(key) + r"\{([^}]*)\}", line)
+        if m2:
+            for nm in m2.group(1).split(","):
+                out.append((key[:-1], nm.strip().lstrip("%")))
+    return out
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _parse_instr(line: str) -> Optional[Instr]:
+    line = _COMMENT_RE.sub("", line)
+    m = _DEF_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    # result shape(s): everything before the op name
+    opm = _OP_RE.match(rhs)
+    op = opm.group(1) if opm else ""
+    head = rhs.split(op + "(", 1)[0] if op else rhs
+    shapes = _SHAPE_RE.findall(head)
+    # operand names: %refs inside the first (...) group
+    operands = []
+    if op:
+        depth = 0
+        start = rhs.find(op + "(") + len(op)
+        args = ""
+        for ch in rhs[start:]:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            if ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        operands = re.findall(r"%[\w\.\-]+", args)
+    return Instr(name, op, shapes, operands, _parse_refs(line), line)
+
+
+def _parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+(%?[\w\.\-]+)", line)
+            cur = Computation(m.group(1).lstrip("%") if m else "entry")
+            comps[cur.name] = cur
+            comps["__entry__"] = cur
+            continue
+        m = re.match(r"^(%?[\w\.\-]+)\s*\(.*->.*\{$", line)
+        if m and "=" not in line.split("(")[0]:
+            cur = Computation(m.group(1).lstrip("%"))
+            comps[cur.name] = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        ins = _parse_instr(line)
+        if ins is not None:
+            cur.instrs.append(ins)
+            cur.table[ins.name] = ins.shapes
+    return comps
+
+
+def _loop_trip_count(cond: Computation) -> int:
+    best = 1
+    for ins in cond.instrs:
+        for m in re.finditer(r"constant\((\d+)\)", ins.line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps = _parse_computations(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"collectives": {}, "collective_bytes": 0.0, "flops": 0.0,
+                "hbm_bytes": 0.0}
+
+    coll_bytes = defaultdict(float)
+    coll_count = defaultdict(float)
+    flops = 0.0
+    hbm = 0.0
+    attn_interior = 0.0
+    active = set()
+
+    def _is_score_block(shapes) -> bool:
+        # (..., qc, kc) score/prob blocks from the XLA-chunked attention: a
+        # Pallas flash kernel keeps these in VMEM (never HBM)
+        for _, dims in shapes:
+            d = dims.split(",") if dims else []
+            if len(d) >= 4 and int(d[-1]) >= 512 and int(d[-2]) >= 512:
+                return True
+        return False
+
+    def operand_shapes(comp: Computation, ins: Instr) -> List[Shape]:
+        out: List[Shape] = []
+        for nm in ins.operands:
+            out.extend(comp.table.get(nm, []))
+        if not out:
+            # operands may carry inline shapes (older format)
+            inline = _SHAPE_RE.findall(
+                ins.line.split(ins.op + "(", 1)[-1]) if ins.op else []
+            out = inline
+        return out
+
+    def visit(comp: Computation, mult: float, top_level: bool):
+        nonlocal flops, hbm, attn_interior
+        if comp.name in active:
+            return
+        active.add(comp.name)
+        for ins in comp.instrs:
+            if ins.op in _COLLECTIVES:
+                ob = _shape_bytes(operand_shapes(comp, ins)) or \
+                    _shape_bytes(ins.shapes)
+                coll_bytes[ins.op] += ob * mult
+                coll_count[ins.op] += mult
+            elif ins.op == "dot":
+                k = _dot_k(comp, ins)
+                flops += 2.0 * sum(_numel(d) for _, d in ins.shapes[:1]) * k * mult
+            elif ins.op == "convolution":
+                k = _conv_k(comp, ins)
+                flops += 2.0 * sum(_numel(d) for _, d in ins.shapes[:1]) * k * mult
+
+            if top_level:
+                b = _hbm_bytes(comp, ins) * mult
+                hbm += b
+                if ins.op in ("fusion", "dot") and _is_score_block(ins.shapes):
+                    attn_interior += b
+
+            # recurse
+            if ins.op == "while":
+                body = next((n for k_, n in ins.refs if k_ == "body"), None)
+                cond = next((n for k_, n in ins.refs if k_ == "condition"), None)
+                trips = _loop_trip_count(comps[cond]) if cond in comps else 1
+                if body in comps:
+                    visit(comps[body], mult * trips, top_level=True)
+            elif ins.op == "fusion":
+                for k_, n in ins.refs:
+                    if k_ == "calls" and n in comps:
+                        visit(comps[n], mult, top_level=False)
+            elif ins.op in ("call", "conditional", "custom-call"):
+                for k_, n in ins.refs:
+                    if k_ in ("to_apply", "calls") and n in comps:
+                        visit(comps[n], mult, top_level=(ins.op == "call"))
+        active.discard(comp.name)
+
+    # ops whose result a TPU would not materialize to HBM (layout/aliasing
+    # artifacts of the CPU-compiled module) — excluded from the memory term
+    _NO_HBM = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "call", "convert", "copy", "reshape",
+               "transpose", "broadcast", "iota", "partition-id",
+               "after-all", "optimization-barrier"}
+
+    def _hbm_bytes(comp: Computation, ins: Instr) -> float:
+        if ins.op in _NO_HBM:
+            return 0.0
+        if ins.op == "dynamic-slice":
+            # reads only the slice (result), not the sliced buffer
+            return 2.0 * _shape_bytes(ins.shapes)
+        if ins.op == "dynamic-update-slice":
+            # in-place: reads + writes only the update operand's extent
+            upd = comp.table.get(ins.operands[1], []) if len(ins.operands) > 1 else []
+            return 2.0 * (_shape_bytes(upd) or _shape_bytes(ins.shapes))
+        if ins.op == "fusion":
+            return _fusion_hbm(comp, ins)
+        return _shape_bytes(ins.shapes) + _shape_bytes(operand_shapes(comp, ins))
+
+    def _fusion_hbm(comp: Computation, ins: Instr) -> float:
+        """Result + operand bytes, but an operand that the fused computation
+        only DYNAMIC-SLICES (e.g. the full remat stash passed into a per-layer
+        fusion) is charged at the slice extent, not the buffer extent —
+        otherwise loop multipliers charge the whole (L, B, S, d) stash once
+        PER LAYER."""
+        total = float(_shape_bytes(ins.shapes))
+        fused = next((comps[n] for k, n in ins.refs
+                      if k == "calls" and n in comps), None)
+        if fused is None:
+            return total + _shape_bytes(operand_shapes(comp, ins))
+        # map operand position -> fused parameter instruction name
+        params = {}
+        for fi in fused.instrs:
+            m = re.search(r"parameter\((\d+)\)", fi.line)
+            if m and fi.op == "parameter":
+                params[int(m.group(1))] = fi.name
+        for pos, opnd in enumerate(ins.operands):
+            full = _shape_bytes(comp.table.get(opnd, []))
+            pname = params.get(pos)
+            if pname is None:
+                total += full
+                continue
+            consumers = [fi for fi in fused.instrs if pname in fi.operands]
+            if consumers and all(
+                    fi.op in ("dynamic-slice", "dynamic-update-slice")
+                    and fi.operands and fi.operands[0] == pname
+                    for fi in consumers):
+                total += sum(_shape_bytes(fi.shapes) for fi in consumers)
+            else:
+                total += full
+        return total
+
+    def _dot_k(comp: Computation, ins: Instr) -> int:
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+        if not m or not ins.operands:
+            return 1
+        lhs = comp.table.get(ins.operands[0], [])
+        if not lhs:
+            return 1
+        dims = lhs[0][1].split(",") if lhs[0][1] else []
+        k = 1
+        for idx in m.group(1).split(","):
+            if idx and int(idx) < len(dims):
+                k *= int(dims[int(idx)])
+        return k
+
+    def _conv_k(comp: Computation, ins: Instr) -> int:
+        if len(ins.operands) < 2:
+            return 1
+        rhs = comp.table.get(ins.operands[1], [])
+        if not rhs:
+            return 1
+        dims = rhs[0][1].split(",") if rhs[0][1] else []
+        k = 1
+        for d in dims[:-1]:
+            k *= int(d)
+        return max(k, 1)
+
+    visit(entry, 1.0, top_level=True)
+
+    return {
+        "collectives": {op: {"bytes": float(coll_bytes[op]),
+                             "count": float(coll_count[op])}
+                        for op in coll_bytes},
+        "collective_bytes": float(sum(coll_bytes.values())),
+        "flops": float(flops),
+        "hbm_bytes": float(hbm),
+        "attn_interior_bytes": float(attn_interior),
+    }

@@ -1,0 +1,37 @@
+"""Benchmark harness — one module per paper claim (the paper has no numeric
+tables, so its §III/§IV claims C1..C5 are the "tables"), plus the roofline
+report from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run overlap    # one suite
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+SUITES = ("overlap", "dispatch", "scaling", "fault", "roofline")
+
+
+def main(argv=None) -> None:
+    args = (argv if argv is not None else sys.argv[1:]) or list(SUITES)
+    failures = []
+    for name in args:
+        t0 = time.time()
+        print(f"\n{'='*74}\nbenchmark suite: {name}\n{'='*74}")
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"-- {name} done in {time.time()-t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        print(f"\nFAILED suites: {failures}")
+        raise SystemExit(1)
+    print("\nall benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Learned URL ranker (DESIGN.md §6): train a small MLP on crawl telemetry
+(url features -> popularity), then plug it into the crawler as `score_fn` —
+the paper's "URL ranker" upgraded from hand-crafted metrics to a model, and
+the concrete recsys-family integration point.
+
+    PYTHONPATH=src python examples/learned_ranker.py
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.core import crawler as CR
+from repro.core.ranker import make_learned_scorer, url_features
+from repro.data.pipeline import ranker_examples
+from repro.launch.mesh import make_host_mesh
+from repro.models.recsys import init_mlp_params, mlp
+from repro.optim import adamw
+from repro.train.trainer import init_train_state, make_train_step
+
+
+def crawl(cfg, steps, mesh, score_fn=None):
+    kw = {"score_fn": score_fn} if score_fn else {}
+    init, sf, sd = CR.make_spmd_crawler(cfg, mesh, **kw)
+    st = init()
+    urls, pop = [], []
+    for t in range(steps):
+        st, rep = (sd if (t + 1) % cfg.dispatch_interval == 0 else sf)(st)
+        m = np.asarray(rep.fetched_mask)
+        urls.append(np.asarray(rep.fetched_urls)[m])
+    from repro.core.webgraph import popularity
+    u = np.concatenate(urls)
+    return u, float(np.asarray(popularity(jnp.asarray(u.astype(np.uint32)), cfg)).mean())
+
+
+def main():
+    cfg = get_reduced("webparf")
+    mesh = make_host_mesh()
+
+    # phase 1: bootstrap crawl with the hand-crafted ranker, collect telemetry
+    urls, base_quality = crawl(cfg, 40, mesh)
+    X, y = ranker_examples(urls, cfg)
+    print(f"bootstrap crawl: {len(urls)} pages, mean fetched-page quality "
+          f"{base_quality:.3f}; {len(np.asarray(X))} ranker examples")
+
+    # phase 2: train the ranker (features -> popularity regression)
+    params = init_mlp_params(jax.random.PRNGKey(0), (8, 32, 16, 1))
+    opt = adamw(lr=1e-2)
+    loss_fn = lambda p, b: jnp.mean((mlp(p, b[0])[:, 0] - b[1]) ** 2)
+    step = jax.jit(make_train_step(loss_fn, opt))
+    state = init_train_state(params, opt)
+    for i in range(200):
+        state, m = step(state, (X, y))
+    print(f"ranker trained: mse {float(m['loss']):.5f}")
+
+    # phase 3: crawl again with the LEARNED ranker driving the priority queues
+    apply_fn = lambda p, feats: jax.nn.sigmoid(mlp(p, feats)[:, 0] * 4.0 - 2.0)
+    flat = jax.tree.map(lambda x: x, state.params)
+    def learned(urls_, cfg_, **_):
+        f = url_features(urls_, cfg_)
+        shp = f.shape[:-1]
+        out = apply_fn(flat, f.reshape(-1, f.shape[-1]))
+        return jnp.clip(out.reshape(shp), 0.0, 0.999)
+    urls2, learned_quality = crawl(cfg, 40, mesh, score_fn=learned)
+    print(f"learned-ranker crawl: {len(urls2)} pages, mean quality "
+          f"{learned_quality:.3f} (hand-crafted: {base_quality:.3f})")
+    print("the frontier's priority buckets are now model-driven — the paper's "
+          "'better design of the classifier/dispatcher' future work, realized")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""The full cascade of the paper's Figure 1: CRAWL -> INDEX -> SEARCH.
+
+    PYTHONPATH=src python examples/search_engine.py
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.core import crawler as CR
+from repro.core import index as IX
+from repro.core import webgraph as W
+from repro.launch.mesh import make_host_mesh
+
+VOCAB, DOC_LEN = 4096, 64
+
+
+def main():
+    cfg = get_reduced("webparf")
+    mesh = make_host_mesh()
+    init, step_f, step_d = CR.make_spmd_crawler(cfg, mesh)
+    state = init()
+
+    # crawl + batched index updates (paper §IV.B.4: "index updated in batches")
+    idx = IX.init_index(4096, DOC_LEN, VOCAB)
+    staged = []
+    for t in range(48):
+        fn = step_d if (t + 1) % cfg.dispatch_interval == 0 else step_f
+        state, rep = fn(state)
+        m = np.asarray(rep.fetched_mask)
+        staged.append(np.asarray(rep.fetched_urls)[m])
+        if (t + 1) % 8 == 0:                      # batch the index build
+            batch = np.concatenate(staged)
+            idx = IX.add_batch(idx, jnp.asarray(batch.astype(np.uint32)),
+                               jnp.ones(len(batch), bool), cfg)
+            staged = []
+    print(f"indexed {int(idx.n_docs)} crawled pages (batched updates)")
+
+    # search: one query per domain — results should come from that domain
+    hits = 0
+    for d in range(min(cfg.n_domains, 4)):
+        q = IX.query_terms(42 + d, 8, VOCAB, domain=d, cfg=cfg)
+        scores, urls = IX.search(idx, q, k=5)
+        doms = np.asarray(W.domain_of(urls, cfg))
+        ok = (doms == d).mean()
+        hits += ok
+        print(f"  query[domain {d}] -> top-5 doc domains {list(doms)} "
+              f"({100*ok:.0f}% on-topic)")
+    print(f"mean on-topic rate: {100*hits/4:.0f}% — the cascade closes: the "
+          f"partitioned crawl feeds a working search index")
+
+
+if __name__ == "__main__":
+    main()

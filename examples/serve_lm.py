@@ -1,0 +1,13 @@
+"""Batched LM serving: prefill a prompt batch, decode with a KV cache —
+the inference path that decode_32k / long_500k lower on the production mesh.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    raise SystemExit(main(["--arch", "deepseek-moe-16b", "--batch", "4",
+                           "--prompt-len", "16", "--gen", "12"]))

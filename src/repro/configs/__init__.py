@@ -1,0 +1,55 @@
+"""Architecture registry: ``get_arch(name) -> (CONFIG, SHAPES, reduced)``."""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict, Tuple
+
+_ARCH_MODULES: Dict[str, str] = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "arctic-480b": "arctic_480b",
+    "phi3-mini-3.8b": "phi3_mini_3_8b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "gat-cora": "gat_cora",
+    "bert4rec": "bert4rec",
+    "dien": "dien",
+    "wide-deep": "wide_deep",
+    "dcn-v2": "dcn_v2",
+    "webparf": "webparf",
+}
+
+ARCH_NAMES = tuple(n for n in _ARCH_MODULES if n != "webparf")
+
+
+def _load(name: str):
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+
+
+def get_arch(name: str):
+    """Return (config, shapes) for an architecture id."""
+    mod = _load(name)
+    return mod.CONFIG, mod.SHAPES
+
+
+def get_reduced(name: str):
+    """Smoke-test-sized config of the same family."""
+    return _load(name).reduced()
+
+
+def get_shape(name: str, shape_name: str):
+    _, shapes = get_arch(name)
+    for s in shapes:
+        if s.name == shape_name:
+            return s
+    raise KeyError(f"{name} has no shape {shape_name!r}")
+
+
+def all_cells():
+    """Every (arch, shape) dry-run cell — 40 total."""
+    out = []
+    for arch in ARCH_NAMES:
+        _, shapes = get_arch(arch)
+        out.extend((arch, s.name) for s in shapes)
+    return out

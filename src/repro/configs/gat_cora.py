@@ -1,0 +1,9 @@
+"""GAT on Cora [arXiv:1710.10903]: 2 layers, 8 hidden x 8 heads, attn aggregator."""
+from repro.configs.base import GNNConfig, GNN_SHAPES, scaled
+
+CONFIG = GNNConfig(name="gat-cora", n_layers=2, d_hidden=8, n_heads=8,
+                   aggregator="attn")
+SHAPES = GNN_SHAPES
+
+def reduced() -> GNNConfig:
+    return scaled(CONFIG, name="gat-smoke", n_layers=2, d_hidden=4, n_heads=2)

@@ -1,0 +1,40 @@
+"""Domain classification (paper §IV.B.3-4).
+
+Two roles, matching the paper:
+  * ``page_domain``      — the page analyzer's classifier: identifies the
+    TRUE domain of a *fetched* page from its content (exact — content
+    determines domain in the synthetic web, as in [Gupta & Bhatia 2012]).
+  * ``predict_domain``   — the dispatcher's pre-fetch prediction for a
+    *discovered* URL: correct with probability ``accuracy``; on a miss it
+    falls back to the source page's domain (topical-locality heuristic the
+    paper leans on) — which itself is right with probability alpha.
+
+A learned classifier (assigned-arch backbone over url_features) can replace
+the stochastic model; the crawler takes ``classify_fn`` as a parameter.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CrawlConfig
+from repro.core import webgraph as W
+
+DEFAULT_ACCURACY = 0.9
+
+
+def page_domain(urls: jax.Array, cfg: CrawlConfig) -> jax.Array:
+    """Post-fetch classification — exact (content is in hand)."""
+    return W.domain_of(urls, cfg)
+
+
+def predict_domain(urls: jax.Array, src_domain: jax.Array, cfg: CrawlConfig,
+                   *, step: jax.Array | int = 0,
+                   accuracy: float = DEFAULT_ACCURACY) -> jax.Array:
+    """Pre-fetch domain prediction for discovered URLs.
+
+    urls: (...,) uint32; src_domain: (...,) domain of the page that linked
+    to them. Stateless pseudo-randomness keyed on (url, step)."""
+    u = W._uniform(W.hash2(urls, jnp.asarray(step, jnp.uint32), 51))
+    truth = W.domain_of(urls, cfg)
+    return jnp.where(u < accuracy, truth, src_domain.astype(jnp.int32))

@@ -1,0 +1,83 @@
+"""URL de-duplication — the dispatcher's filter stage (paper §IV.B.4).
+
+Two levels, as in production crawlers:
+  1. batch-local EXACT dedup (sort + neighbour equality) — removes repeats
+     discovered within one dispatch batch;
+  2. a per-domain-row BLOOM FILTER remembering everything ever inserted into
+     that domain's pool — approximate membership with a configurable bit
+     budget (false positives drop a fresh URL occasionally; false negatives
+     are impossible, so C1 "never crawl twice" holds).
+
+State is a byte-per-bit uint8 array (simple, scatter-set is idempotent).
+kernels/bloom provides the TPU Pallas version (bit-packed in VMEM); ref.py
+mirrors this module.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.webgraph import hash2
+
+
+class Bloom(NamedTuple):
+    bits: jax.Array        # (R, 2^b) uint8 — one filter per domain row
+    n_bits_log2: int       # static
+
+    @property
+    def n_rows(self) -> int:
+        return self.bits.shape[0]
+
+
+def init_bloom(n_rows: int, bits_log2: int) -> Bloom:
+    return Bloom(jnp.zeros((n_rows, 1 << bits_log2), jnp.uint8), bits_log2)
+
+
+def _bit_indices(urls: jax.Array, k: int, bits_log2: int) -> jax.Array:
+    """urls (..., M) -> (..., M, k) bit positions via double hashing."""
+    h1 = hash2(urls, 101)
+    h2 = hash2(urls, 202) | jnp.uint32(1)
+    i = jnp.arange(k, dtype=jnp.uint32)
+    mask = jnp.uint32((1 << bits_log2) - 1)
+    return ((h1[..., None] + i * h2[..., None]) & mask).astype(jnp.int32)
+
+
+def probe_insert(b: Bloom, urls: jax.Array, mask: jax.Array, *, k: int
+                 ) -> Tuple[jax.Array, Bloom]:
+    """urls/mask: (R, M). Returns (seen (R,M) bool, updated filter).
+
+    Probe-then-insert: `seen` reflects membership BEFORE this batch."""
+    R, M = urls.shape
+    idx = _bit_indices(urls, k, b.n_bits_log2)            # (R, M, k)
+    rows = jnp.arange(R)[:, None, None]
+    got = b.bits[rows, idx]                               # (R, M, k)
+    seen = (got == 1).all(axis=-1) & mask
+    # insert: scatter-max of (1 * mask) — idempotent under duplicate indices,
+    # and masked-out writes contribute 0 (a no-op under max)
+    upd = jnp.broadcast_to(mask[..., None], idx.shape).astype(jnp.uint8)
+    bits = b.bits.at[rows, idx].max(upd)
+    return seen, Bloom(bits, b.n_bits_log2)
+
+
+def exact_dedup(urls: jax.Array, mask: jax.Array) -> jax.Array:
+    """Batch-local exact dedup along the trailing axis: keep the FIRST
+    occurrence of each URL. Returns the filtered mask."""
+    big = jnp.uint32(0xFFFFFFFF)
+    key = jnp.where(mask, urls, big)
+    order = jnp.argsort(key, axis=-1, stable=True)
+    sorted_u = jnp.take_along_axis(key, order, axis=-1)
+    first = jnp.concatenate([
+        jnp.ones(sorted_u.shape[:-1] + (1,), bool),
+        sorted_u[..., 1:] != sorted_u[..., :-1]], axis=-1)
+    # scatter `first` back to original positions
+    keep_sorted = first & (sorted_u != big)
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(keep_sorted, inv, axis=-1) & mask
+
+
+def fp_rate(b: Bloom, n_inserted: jax.Array, k: int) -> jax.Array:
+    """Analytic false-positive rate given inserts per row."""
+    m = jnp.float32(1 << b.n_bits_log2)
+    return (1.0 - jnp.exp(-k * n_inserted.astype(jnp.float32) / m)) ** k

@@ -1,0 +1,111 @@
+"""The Global URL Frontier — Phase I's partitioned, prioritized URL queues.
+
+One row per domain (row index = the domain's *slot*; partitioner.py owns the
+domain<->slot maps so rows can migrate on rebalance). Each row is a fixed-
+capacity priority queue: ``priority`` encodes (priority bucket, FIFO arrival)
+exactly like the paper's Fig. 5 structure — URLs with the same relevance
+bucket form a FIFO list, higher buckets first.
+
+All operations are vectorized over rows and jittable; under shard_map the row
+axis is sharded over the crawler (data) mesh axes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG = jnp.float32(-3e38)
+_FIFO_RANGE = 1 << 20          # max arrivals distinguishable within a bucket
+
+
+class Frontier(NamedTuple):
+    url: jax.Array          # (R, C) uint32
+    priority: jax.Array     # (R, C) f32; NEG when slot invalid
+    valid: jax.Array        # (R, C) bool
+    arrival: jax.Array      # (R,) int32 — per-row arrival counter (FIFO order)
+    n_dropped: jax.Array    # (R,) int32 — overflow drops (reported, C3/C5)
+    n_inserted: jax.Array   # (R,) int32
+
+
+def init_frontier(n_rows: int, capacity: int) -> Frontier:
+    return Frontier(
+        url=jnp.zeros((n_rows, capacity), jnp.uint32),
+        priority=jnp.full((n_rows, capacity), NEG, jnp.float32),
+        valid=jnp.zeros((n_rows, capacity), bool),
+        arrival=jnp.zeros((n_rows,), jnp.int32),
+        n_dropped=jnp.zeros((n_rows,), jnp.int32),
+        n_inserted=jnp.zeros((n_rows,), jnp.int32),
+    )
+
+
+def encode_priority(score: jax.Array, arrival_seq: jax.Array,
+                    n_buckets: int) -> jax.Array:
+    """score in [0,1) -> bucketed priority with FIFO tie-break (Fig. 5):
+    higher bucket wins; within a bucket, earlier arrival wins."""
+    bucket = jnp.clip((score * n_buckets).astype(jnp.int32), 0, n_buckets - 1)
+    return (bucket.astype(jnp.float32) * _FIFO_RANGE
+            - jnp.minimum(arrival_seq, _FIFO_RANGE - 1).astype(jnp.float32))
+
+
+def select(f: Frontier, k: int) -> Tuple[jax.Array, jax.Array, jax.Array, Frontier]:
+    """Pop the top-k URLs of every row (the URL allocator's read).
+
+    Returns (urls (R,k), priorities (R,k), mask (R,k), new frontier)."""
+    masked = jnp.where(f.valid, f.priority, NEG)
+    pri, idx = lax.top_k(masked, k)                      # (R, k)
+    got = jnp.take_along_axis(f.url, idx, axis=1)
+    mask = pri > NEG * 0.5
+    # invalidate selected slots
+    rows = jnp.arange(f.url.shape[0])[:, None]
+    new_valid = f.valid.at[rows, idx].set(
+        jnp.where(mask, False, jnp.take_along_axis(f.valid, idx, axis=1)))
+    new_pri = f.priority.at[rows, idx].set(jnp.where(mask, NEG, pri))
+    return got, pri, mask, f._replace(valid=new_valid, priority=new_pri)
+
+
+def insert(f: Frontier, urls: jax.Array, scores: jax.Array,
+           mask: jax.Array, *, n_buckets: int) -> Frontier:
+    """Insert up to M URLs per row into free slots (dispatcher's write).
+
+    urls/scores/mask: (R, M). Items beyond the row's free capacity are
+    dropped and counted (bounded queues — DESIGN.md §2)."""
+    R, C = f.url.shape
+    M = urls.shape[1]
+    # FIFO arrival sequence for the incoming batch
+    order = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1          # (R, M)
+    pri = encode_priority(scores, f.arrival[:, None] + order, n_buckets)
+
+    # free slots: argsort(valid) puts invalid (False) first — stable
+    free_idx = jnp.argsort(f.valid, axis=1, stable=True)            # (R, C)
+    n_free = (~f.valid).sum(axis=1)                                 # (R,)
+    fits = mask & (order < n_free[:, None])
+    tgt = jnp.take_along_axis(
+        free_idx, jnp.clip(order, 0, C - 1), axis=1)                # (R, M)
+    rows = jnp.arange(R)[:, None]
+    # dropped items scatter into a trash column (index C) so they can never
+    # collide with a legitimate write — duplicate-index scatter order is
+    # undefined in XLA, so collisions must be structurally impossible
+    tgt_safe = jnp.where(fits, tgt, C)
+
+    def put(arr, vals, fill):
+        ext = jnp.concatenate(
+            [arr, jnp.full((R, 1), fill, arr.dtype)], axis=1)
+        ext = ext.at[rows, tgt_safe].set(jnp.where(fits, vals, fill).astype(arr.dtype))
+        return ext[:, :C]
+
+    url2 = put(f.url, urls, 0)
+    pri2 = put(f.priority, pri, NEG)
+    val2 = put(f.valid, fits, False) | f.valid
+    return Frontier(
+        url=url2, priority=pri2, valid=val2,
+        arrival=f.arrival + mask.sum(axis=1).astype(jnp.int32),
+        n_dropped=f.n_dropped + (mask & ~fits).sum(axis=1).astype(jnp.int32),
+        n_inserted=f.n_inserted + fits.sum(axis=1).astype(jnp.int32),
+    )
+
+
+def occupancy(f: Frontier) -> jax.Array:
+    return f.valid.sum(axis=1)

@@ -1,0 +1,106 @@
+"""The search-engine side of the cascade (paper Fig. 1: crawl -> index ->
+search) — the consumer the crawler exists to feed.
+
+Matches the paper's §IV.B.4 rationale directly: "the index is not updated
+continuously, but rather updated completely at some later time" — documents
+are added in BATCHES (the same batching argument as the URL dispatcher's C5).
+
+Design: a fixed-capacity, device-resident bag-of-words index over hashed
+terms. Documents are the crawler's fetched pages (token content from the
+synthetic web). Scoring is TF-IDF against the doc-token matrix — O(docs x
+doc_len x query_len) fused compute, sharded over the data axis like every
+other batch quantity. No host-side posting lists: the index IS arrays, so it
+checkpoints/reshards with the rest of the system state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import CrawlConfig
+from repro.core import webgraph as W
+
+
+class Index(NamedTuple):
+    doc_url: jax.Array      # (capacity,) uint32 — 0 = empty slot
+    doc_tokens: jax.Array   # (capacity, doc_len) int32 hashed terms
+    doc_valid: jax.Array    # (capacity,) bool
+    n_docs: jax.Array       # () int32
+    df: jax.Array           # (vocab,) int32 document frequencies
+
+
+def init_index(capacity: int, doc_len: int, vocab: int) -> Index:
+    return Index(
+        doc_url=jnp.zeros((capacity,), jnp.uint32),
+        doc_tokens=jnp.zeros((capacity, doc_len), jnp.int32),
+        doc_valid=jnp.zeros((capacity,), bool),
+        n_docs=jnp.zeros((), jnp.int32),
+        df=jnp.zeros((vocab,), jnp.int32),
+    )
+
+
+def add_batch(idx: Index, urls: jax.Array, mask: jax.Array,
+              cfg: CrawlConfig) -> Index:
+    """Batch index update (the paper's batched index build). urls: (M,).
+    Documents beyond capacity are dropped (oldest-kept policy)."""
+    cap, doc_len = idx.doc_tokens.shape
+    vocab = idx.df.shape[0]
+    toks = W.page_tokens(urls, cfg, n_tokens=doc_len, vocab=vocab)  # (M, L)
+
+    order = jnp.cumsum(mask.astype(jnp.int32)) - 1
+    pos = idx.n_docs + order
+    fits = mask & (pos < cap)
+    pos_safe = jnp.where(fits, pos, cap)
+
+    def put(arr, vals, fill):
+        ext = jnp.concatenate([arr, jnp.full((1,) + arr.shape[1:], fill,
+                                             arr.dtype)])
+        ext = ext.at[pos_safe].set(jnp.where(
+            fits.reshape((-1,) + (1,) * (vals.ndim - 1)), vals, fill).astype(arr.dtype))
+        return ext[:cap]
+
+    # document frequencies: count each term once per doc
+    sorted_t = jnp.sort(toks, axis=1)
+    first = jnp.concatenate([jnp.ones((toks.shape[0], 1), bool),
+                             sorted_t[:, 1:] != sorted_t[:, :-1]], axis=1)
+    contrib = (first & fits[:, None]).astype(jnp.int32)
+    df = idx.df.at[sorted_t.reshape(-1)].add(contrib.reshape(-1))
+
+    return Index(
+        doc_url=put(idx.doc_url, urls, 0),
+        doc_tokens=put(idx.doc_tokens, toks, 0),
+        doc_valid=put(idx.doc_valid, fits, False) | idx.doc_valid,
+        n_docs=idx.n_docs + fits.sum().astype(jnp.int32),
+        df=df,
+    )
+
+
+def search(idx: Index, query: jax.Array, *, k: int = 10
+           ) -> Tuple[jax.Array, jax.Array]:
+    """TF-IDF retrieval. query: (Q,) hashed terms -> (scores, urls) top-k.
+
+    tf(d, t) = count of t in doc d; idf(t) = log(1 + N / (1 + df[t])).
+    The (docs, Q) match computation shards over the data axis with the doc
+    arrays; top-k is a single lax.top_k over doc scores."""
+    N = jnp.maximum(idx.n_docs.astype(jnp.float32), 1.0)
+    idf = jnp.log1p(N / (1.0 + idx.df[query].astype(jnp.float32)))   # (Q,)
+    # tf: (docs, Q) via equality match against the doc-token matrix
+    eq = (idx.doc_tokens[:, :, None] == query[None, None, :])
+    tf = eq.sum(axis=1).astype(jnp.float32)                          # (D, Q)
+    scores = (jnp.log1p(tf) * idf[None, :]).sum(axis=1)
+    scores = jnp.where(idx.doc_valid, scores, -jnp.inf)
+    s, i = lax.top_k(scores, k)
+    return s, idx.doc_url[i]
+
+
+def query_terms(text_seed: int, n_terms: int, vocab: int,
+                domain: int, cfg: CrawlConfig) -> jax.Array:
+    """Synthetic query generator: terms drawn from a domain's token band
+    (what a user interested in that domain would search)."""
+    band = vocab // max(int(cfg.n_domains), 1)
+    h = W.hash2(jnp.full((n_terms,), text_seed, jnp.uint32),
+                jnp.arange(n_terms, dtype=jnp.uint32), 91)
+    return (domain * band + (h % jnp.uint32(max(band, 1))).astype(jnp.int32))

@@ -1,0 +1,144 @@
+"""Phase I — creating the partitioned Global URL Frontier, plus the
+control-plane maps that make the system elastic (C3) and fault-tolerant (C4).
+
+The domain <-> slot indirection is the key mechanism: frontier/bloom rows are
+indexed by SLOT; ``slot_of_domain`` says where each domain currently lives.
+Rebalancing a dead shard = remapping its domains' slots and migrating rows
+(a permutation gather over the sharded row axis — the real migration cost
+shows up as collective traffic, as it would on hardware).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CrawlConfig
+from repro.core import frontier as F
+from repro.core import ranker
+from repro.core import webgraph as W
+from repro.core.dedup import Bloom, init_bloom
+
+
+class DomainMap(NamedTuple):
+    slot_of_domain: jax.Array    # (n_domains,) int32
+    domain_of_slot: jax.Array    # (n_slots,) int32 (-1 = empty slot)
+    shard_alive: jax.Array       # (n_shards,) bool
+
+
+def identity_map(cfg: CrawlConfig, n_shards: int) -> DomainMap:
+    """Initial layout: shard s hosts domains [s*d, (s+1)*d) in its first d
+    slots; the remaining (slot_factor-1)*d slots per shard are spare, so C4
+    rebalancing always finds a free slot and never merges queues."""
+    n, ns = cfg.n_domains, cfg.n_slots
+    per_dom = n // n_shards
+    per_slot = ns // n_shards
+    dom = np.arange(n)
+    shard = dom // per_dom
+    slot = shard * per_slot + dom % per_dom
+    domain_of_slot = np.full(ns, -1, np.int32)
+    domain_of_slot[slot] = dom
+    return DomainMap(
+        slot_of_domain=jnp.asarray(slot, jnp.int32),
+        domain_of_slot=jnp.asarray(domain_of_slot),
+        shard_alive=jnp.ones((n_shards,), bool),
+    )
+
+
+def shard_of_slot(slot: jax.Array, n_slots: int, n_shards: int) -> jax.Array:
+    return (slot // (n_slots // n_shards)).astype(jnp.int32)
+
+
+def seed_frontier(cfg: CrawlConfig, n_shards: int) -> F.Frontier:
+    """Gather hub seeds per domain (the classification-hierarchy method) and
+    build the initial prioritized queues at each domain's slot."""
+    dm = identity_map(cfg, n_shards)
+    f = F.init_frontier(cfg.n_slots, cfg.frontier_capacity)
+    seeds = W.hub_seeds(cfg)                              # (n_domains, N)
+    # the candidate window can hash-collide: dedup per domain or the same
+    # seed URL is queued (and crawled) twice — C1 leak #2 found by
+    # benchmarks/overlap.py at classify_accuracy=1.0
+    from repro.core.dedup import exact_dedup
+    seed_mask = exact_dedup(seeds, jnp.ones(seeds.shape, bool))
+    by_slot = jnp.zeros((cfg.n_slots, seeds.shape[1]), seeds.dtype)
+    by_slot = by_slot.at[dm.slot_of_domain].set(seeds)
+    mask = jnp.zeros((cfg.n_slots, seeds.shape[1]), bool)
+    mask = mask.at[dm.slot_of_domain].set(seed_mask)
+    scores = ranker.score_urls(by_slot, cfg)
+    return F.insert(f, by_slot, scores, mask, n_buckets=cfg.n_priority_buckets)
+
+
+def rebalance(dm: DomainMap, dead_shards: Sequence[int], *,
+              loads: np.ndarray | None = None) -> DomainMap:
+    """C4: redistribute a dead shard's domains over surviving shards,
+    balanced by current load (least-loaded first). Host-side control plane —
+    this is a scheduler decision, not device compute."""
+    slot_of_domain = np.asarray(dm.slot_of_domain).copy()
+    domain_of_slot = np.asarray(dm.domain_of_slot).copy()
+    alive = np.asarray(dm.shard_alive).copy()
+    n_slots = len(domain_of_slot)
+    n_shards = len(alive)
+    per = n_slots // n_shards
+    alive[list(dead_shards)] = False
+    live = np.where(alive)[0]
+    if len(live) == 0:
+        raise ValueError("rebalance: no live shards remain")
+    if loads is None:
+        loads = np.zeros(n_shards)
+    loads = loads.astype(np.float64).copy()
+
+    for s in dead_shards:
+        for slot in range(s * per, (s + 1) * per):
+            d = domain_of_slot[slot]
+            if d < 0:
+                continue
+            # find a free slot on the least-loaded live shard
+            order = live[np.argsort(loads[live], kind="stable")]
+            placed = False
+            for tgt_shard in order:
+                for tslot in range(tgt_shard * per, (tgt_shard + 1) * per):
+                    if domain_of_slot[tslot] < 0:
+                        domain_of_slot[tslot] = d
+                        domain_of_slot[slot] = -1
+                        slot_of_domain[d] = tslot
+                        loads[tgt_shard] += 1
+                        placed = True
+                        break
+                if placed:
+                    break
+            if not placed:
+                # no free slots: merge into the least-loaded shard's matching
+                # slot (domain shares a row — tracked by slot_of_domain)
+                tgt_shard = order[0]
+                tslot = tgt_shard * per + (d % per)
+                slot_of_domain[d] = tslot
+                domain_of_slot[slot] = -1
+                loads[tgt_shard] += 1
+    return DomainMap(jnp.asarray(slot_of_domain), jnp.asarray(domain_of_slot),
+                     jnp.asarray(alive))
+
+
+def migrate_rows(arrs, old_map: DomainMap, new_map: DomainMap):
+    """Permute row-indexed state (frontier/bloom leaves) after a remap.
+
+    For every new slot, pull the row of the slot its domain used to occupy.
+    jittable — under pjit this is a gather across the sharded row axis (real
+    migration traffic)."""
+    n_slots = old_map.domain_of_slot.shape[0]
+    dom = new_map.domain_of_slot                          # (n_slots,)
+    src = jnp.where(dom >= 0,
+                    old_map.slot_of_domain[jnp.clip(dom, 0)],
+                    jnp.arange(n_slots))
+    return jax.tree.map(lambda a: a[src] if a.ndim >= 1 and a.shape[0] == n_slots else a,
+                        arrs)
+
+
+def split_domains(cfg: CrawlConfig) -> CrawlConfig:
+    """C3 elasticity: split every domain into two sub-domains (doubling the
+    partition count). URL ids are stable — one more bit of the local space
+    becomes part of the domain id."""
+    import dataclasses
+    assert cfg.url_space_log2 > int(np.log2(cfg.n_domains)) + 1
+    return dataclasses.replace(cfg, n_domains=cfg.n_domains * 2)

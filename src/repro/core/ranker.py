@@ -1,0 +1,50 @@
+"""URL ranker (paper §IV.A.2) — relevance scoring for the prioritized queues.
+
+The paper's scoring metrics: pages linking to the URL (popularity proxy),
+request count, and hub-ness [Cho/Garcia-Molina/Page 1998 "URL ordering"].
+Scores land in [0, 1); frontier.encode_priority quantizes them into the
+paper's priority buckets with FIFO tie-break.
+
+An optional learned scorer (any assigned architecture; see DESIGN.md §6) can
+replace the hand-crafted linear blend — ``score_fn`` is pluggable.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CrawlConfig
+from repro.core import webgraph as W
+
+
+def score_urls(urls: jax.Array, cfg: CrawlConfig, *,
+               request_count: Optional[jax.Array] = None,
+               w_pop: float = 0.7, w_hub: float = 0.2,
+               w_req: float = 0.1) -> jax.Array:
+    """Relevance in [0, 1). Vectorized over any shape."""
+    pop = W.popularity(urls, cfg)                       # inlink-count proxy
+    hub = W.is_hub(urls, cfg).astype(jnp.float32)       # hub bonus
+    req = jnp.zeros_like(pop) if request_count is None else \
+        jnp.minimum(request_count.astype(jnp.float32) / 16.0, 1.0)
+    s = w_pop * pop + w_hub * hub + w_req * req
+    return jnp.clip(s, 0.0, 0.999)
+
+
+def make_learned_scorer(apply_fn: Callable, params) -> Callable:
+    """Wrap a model (e.g. a small LM or recsys ranker over URL features) as a
+    frontier scorer: apply_fn(params, features) -> scores in [0,1)."""
+    def scorer(urls: jax.Array, cfg: CrawlConfig, **_) -> jax.Array:
+        feats = url_features(urls, cfg)
+        return jnp.clip(apply_fn(params, feats), 0.0, 0.999)
+    return scorer
+
+
+def url_features(urls: jax.Array, cfg: CrawlConfig) -> jax.Array:
+    """Static per-URL feature vector (8 dims) for learned scorers."""
+    pop = W.popularity(urls, cfg)
+    hub = W.is_hub(urls, cfg).astype(jnp.float32)
+    dom = W.domain_of(urls, cfg).astype(jnp.float32) / cfg.n_domains
+    h = [W._uniform(W.hash2(urls, s)) for s in (41, 42, 43, 44, 45)]
+    return jnp.stack([pop, hub, dom, *h], axis=-1)

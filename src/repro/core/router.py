@@ -1,0 +1,81 @@
+"""Capacity-bucketed destination routing — the framework's shared dispatch
+primitive.
+
+WebParF's URL dispatcher and a Mixture-of-Experts layer solve the same
+problem: N items each carry a destination id (domain owner / expert); items
+must be packed into per-destination buckets with bounded capacity, moved,
+processed, and (for MoE) combined back. This module implements the pattern
+once:
+
+  * ``position_in_bucket``  — cumsum-based slot assignment + capacity drop
+    (used by models/layers.moe_block and by the crawler's dispatcher)
+  * ``exchange``            — shard_map-level all_to_all of per-destination
+    buckets across a mesh axis (the crawler's batched URL exchange, C5)
+
+The correspondence is the paper's technique made first-class (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def position_in_bucket(dest: jax.Array, n_dest: int, capacity: int,
+                       *, valid: Optional[jax.Array] = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """dest: (..., N) int32 destination per item (trailing axis = items).
+
+    Returns (slot (...,N) int32, keep (...,N) bool): slot is the item's
+    position within its destination bucket (arrival order preserved — the
+    paper's FIFO-within-priority semantics); keep is False for items beyond
+    ``capacity`` or with ``valid``==False.
+    """
+    onehot = jax.nn.one_hot(dest, n_dest, dtype=jnp.int32, axis=-1)  # (...,N,D)
+    if valid is not None:
+        onehot = onehot * valid[..., None].astype(jnp.int32)
+    pos = jnp.cumsum(onehot, axis=-2) - onehot                       # exclusive
+    slot = jnp.take_along_axis(pos, dest[..., None], axis=-1)[..., 0]
+    keep = slot < capacity
+    if valid is not None:
+        keep = keep & valid
+    return slot, keep
+
+
+def pack_buckets(payload: jax.Array, dest: jax.Array, n_dest: int,
+                 capacity: int, *, valid: Optional[jax.Array] = None,
+                 fill=0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Scatter items (N, ...) into per-destination buckets (n_dest, capacity, ...).
+
+    Returns (buckets, bucket_mask (n_dest, capacity) bool, dropped count)."""
+    slot, keep = position_in_bucket(dest, n_dest, capacity, valid=valid)
+    s_safe = jnp.where(keep, slot, capacity - 1)
+    buckets = jnp.full((n_dest, capacity) + payload.shape[1:], fill, payload.dtype)
+    vals = jnp.where(
+        keep.reshape(keep.shape + (1,) * (payload.ndim - 1)), payload, fill)
+    buckets = buckets.at[dest, s_safe].max(vals, mode="drop") if payload.dtype == jnp.bool_ \
+        else buckets.at[dest, s_safe].add(vals, mode="drop")
+    mask = jnp.zeros((n_dest, capacity), jnp.bool_)
+    mask = mask.at[dest, s_safe].max(keep, mode="drop")
+    n_valid = valid.sum() if valid is not None else dest.size
+    return buckets, mask, n_valid - keep.sum()
+
+
+def exchange(buckets: jax.Array, axis_name) -> jax.Array:
+    """All-to-all a (n_shards, capacity, ...) send buffer over a mesh axis.
+
+    Must be called inside shard_map. Shard i's row j goes to shard j's row i —
+    the batched URL exchange of WebParF's dispatcher. ``axis_name`` may be a
+    tuple of mesh axes (pod, data) which are treated as one flat crawler axis.
+    """
+    return lax.all_to_all(buckets, axis_name, split_axis=0, concat_axis=0,
+                          tiled=True)
+
+
+def moe_capacity(n_items: int, top_k: int, n_dest: int,
+                 capacity_factor: float) -> int:
+    import math
+    c = int(math.ceil(n_items * top_k * capacity_factor / n_dest))
+    return max(8, -(-c // 8) * 8)

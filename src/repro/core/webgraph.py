@@ -1,0 +1,142 @@
+"""Synthetic Web: a deterministic, stateless, jittable stand-in for WWW fetches.
+
+The container has no network, so "fetching" a page is pure compute derived
+from the URL id by splittable hashing. URL ids pack (domain, local):
+
+    url = domain << local_bits | local
+
+which makes the paper's topical structure explicit and samplable:
+  * in-domain outlinks (probability = topical_locality) keep the domain bits;
+  * cross-domain outlinks draw a Zipf-weighted domain;
+  * the upper half of each domain's local space are ALIASES of canonical
+    pages in the lower half (same content, different URL) — this exercises
+    the paper's content-duplication claim (C2) separately from URL
+    duplication (C1);
+  * page tokens are a domain-dependent unigram mixture, so the crawl output
+    is a usable LM training corpus (data/pipeline.py).
+
+Everything is uint32 arithmetic on arrays — no host state, shardable.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CrawlConfig
+
+U32 = jnp.uint32
+
+
+def _mix(x: jax.Array, salt: int) -> jax.Array:
+    """murmur3-style finalizer — a cheap stateless hash on uint32."""
+    x = x.astype(U32) ^ jnp.uint32((salt * 0x9E3779B9 + 0x85EBCA6B) & 0xFFFFFFFF)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> 16)
+
+
+def hash2(a: jax.Array, b, salt: int = 0) -> jax.Array:
+    return _mix(a.astype(U32) + _mix(jnp.asarray(b, U32), salt + 7), salt)
+
+
+def _uniform(x: jax.Array) -> jax.Array:
+    """uint32 -> f32 in [0, 1)."""
+    return x.astype(jnp.float32) * (1.0 / 4294967296.0)
+
+
+def local_bits(cfg: CrawlConfig) -> int:
+    return cfg.url_space_log2 - int(np.log2(cfg.n_domains))
+
+
+def domain_of(url: jax.Array, cfg: CrawlConfig) -> jax.Array:
+    """TRUE domain — what the page analyzer's classifier recovers post-fetch."""
+    return (url >> local_bits(cfg)).astype(jnp.int32)
+
+
+def make_url(domain: jax.Array, local: jax.Array, cfg: CrawlConfig) -> jax.Array:
+    lb = local_bits(cfg)
+    mask = jnp.uint32((1 << lb) - 1)
+    return (domain.astype(U32) << lb) | (local.astype(U32) & mask)
+
+
+def zipf_cumweights(cfg: CrawlConfig) -> jax.Array:
+    """Static cumulative Zipf weights over domains (domain-size skew)."""
+    w = 1.0 / np.arange(1, cfg.n_domains + 1) ** cfg.zipf_a
+    w = w / w.sum()
+    return jnp.asarray(np.cumsum(w), jnp.float32)
+
+
+def sample_domain(h: jax.Array, cumw: jax.Array) -> jax.Array:
+    """Zipf-weighted domain from a hash value."""
+    return jnp.searchsorted(cumw, _uniform(h)).astype(jnp.int32)
+
+
+def canonical(url: jax.Array, cfg: CrawlConfig) -> jax.Array:
+    """Alias resolution ('relative -> absolute' analogue). The top
+    ``alias_fraction`` of each domain's local space mirrors canonical pages."""
+    lb = local_bits(cfg)
+    mask = jnp.uint32((1 << lb) - 1)
+    local = url & mask
+    alias_start = jnp.uint32(int((1 << lb) * (1.0 - cfg.alias_fraction)))
+    is_alias = local >= alias_start
+    canon_local = _mix(local, 11) % jnp.maximum(alias_start, 1)
+    return jnp.where(is_alias, make_url(domain_of(url, cfg), canon_local, cfg), url)
+
+
+def outlinks(url: jax.Array, cfg: CrawlConfig, cumw: jax.Array) -> jax.Array:
+    """Parse a page: (..., ) -> (..., outlinks_per_page) discovered URLs.
+
+    Links come from the CANONICAL page (aliases share outlinks too)."""
+    c = canonical(url, cfg)[..., None]                   # content-determined
+    i = jnp.arange(cfg.outlinks_per_page, dtype=U32)
+    h_stay = hash2(c, i, 1)
+    h_dom = hash2(c, i, 2)
+    h_loc = hash2(c, i, 3)
+    stay = _uniform(h_stay) < cfg.topical_locality
+    dom = jnp.where(stay, domain_of(url, cfg)[..., None], sample_domain(h_dom, cumw))
+    return make_url(dom, h_loc, cfg)
+
+
+def page_tokens(url: jax.Array, cfg: CrawlConfig, *, n_tokens: int,
+                vocab: int) -> jax.Array:
+    """Domain-clustered unigram content of the canonical page."""
+    c = canonical(url, cfg)[..., None]
+    i = jnp.arange(n_tokens, dtype=U32)
+    h = hash2(c, i, 4)
+    dom = domain_of(url, cfg)[..., None]
+    # 70% of tokens from a domain-specific band, 30% global
+    band = vocab // max(int(cfg.n_domains), 1)
+    in_band = _uniform(hash2(c, i, 5)) < 0.7
+    tok_band = (dom * band + (h % jnp.uint32(max(band, 1))).astype(jnp.int32))
+    tok_glob = (h % jnp.uint32(vocab)).astype(jnp.int32)
+    return jnp.where(in_band, tok_band, tok_glob)
+
+
+def popularity(url: jax.Array, cfg: CrawlConfig) -> jax.Array:
+    """Static page-quality proxy (inlink count analogue): Pareto-ish in [0,1].
+    The URL ranker's main relevance feature [Cho et al. 1998]."""
+    u = _uniform(_mix(canonical(url, cfg), 21))
+    return 1.0 - jnp.sqrt(u)      # density skewed toward low scores
+
+
+def is_hub(url: jax.Array, cfg: CrawlConfig) -> jax.Array:
+    """Hub pages = top popularity percentile (seed candidates, §IV.A.1)."""
+    return popularity(url, cfg) > 0.95
+
+
+def hub_seeds(cfg: CrawlConfig) -> jax.Array:
+    """Phase I seed gathering: N top 'hub' URLs per domain, emulating the
+    trusted classification-hierarchy directory. Returns (n_domains, N)."""
+    d = jnp.arange(cfg.n_domains, dtype=U32)[:, None]
+    j = jnp.arange(cfg.seed_urls_per_domain, dtype=U32)[None, :]
+    # scan a window of candidate locals, pick the most popular N
+    n_cand = max(cfg.seed_urls_per_domain * 8, 64)
+    cand_local = _mix(hash2(d, jnp.arange(n_cand, dtype=U32)[None, :], 31), 32)
+    cand = make_url(jnp.broadcast_to(d, cand_local.shape), cand_local, cfg)
+    pop = popularity(cand, cfg)
+    _, idx = jax.lax.top_k(pop, cfg.seed_urls_per_domain)
+    return jnp.take_along_axis(cand, idx, axis=1)

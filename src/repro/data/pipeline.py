@@ -1,0 +1,68 @@
+"""Crawl -> training-data pipeline.
+
+The paper's crawler exists to feed a search-engine index; in this framework
+the crawled collection feeds MODEL TRAINING: the synthetic web's pages yield
+token streams (LM family), URL interaction features (recsys ranker training),
+and the link graph itself (GNN). This module turns FetchReports into batched
+training inputs — the "collection creation" half of Phase II.
+
+Token batches are produced entirely on device from the fetched URL ids
+(content is hash-derived, webgraph.page_tokens), so the pipeline is jittable
+and shardable like everything else.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CrawlConfig
+from repro.core import webgraph as W
+
+
+def pages_to_tokens(urls: jax.Array, cfg: CrawlConfig, *, tokens_per_page: int,
+                    vocab: int) -> jax.Array:
+    """(N,) fetched URLs -> (N, tokens_per_page) token matrix."""
+    return W.page_tokens(urls, cfg, n_tokens=tokens_per_page, vocab=vocab)
+
+
+def lm_batches(fetched_urls: np.ndarray, cfg: CrawlConfig, *, batch: int,
+               seq_len: int, vocab: int, drop_last: bool = True
+               ) -> Iterator[Tuple[jax.Array, jax.Array]]:
+    """Pack crawled pages into (tokens, labels) LM training batches.
+
+    Pages are concatenated into a stream and chunked to seq_len+1; labels are
+    the shifted stream (next-token prediction)."""
+    tokens_per_page = seq_len // 4
+    urls = jnp.asarray(fetched_urls.astype(np.uint32))
+    toks = np.asarray(pages_to_tokens(urls, cfg, tokens_per_page=tokens_per_page,
+                                      vocab=vocab)).reshape(-1)
+    n_seq = len(toks) // (seq_len + 1)
+    toks = toks[: n_seq * (seq_len + 1)].reshape(n_seq, seq_len + 1)
+    for i in range(0, n_seq - batch + 1, batch):
+        chunk = toks[i: i + batch]
+        yield jnp.asarray(chunk[:, :-1]), jnp.asarray(chunk[:, 1:])
+
+
+def crawl_edges(fetched_urls: np.ndarray, cfg: CrawlConfig
+                ) -> Tuple[np.ndarray, np.ndarray]:
+    """Link structure of the crawled set — (src, dst) edge arrays for GNN
+    training over the crawl graph (DESIGN.md §6, gat-cora integration)."""
+    urls = jnp.asarray(fetched_urls.astype(np.uint32))
+    cumw = W.zipf_cumweights(cfg)
+    outs = np.asarray(W.outlinks(urls, cfg, cumw))          # (N, O)
+    src = np.repeat(np.asarray(fetched_urls), outs.shape[1])
+    return src.astype(np.int64), outs.reshape(-1).astype(np.int64)
+
+
+def ranker_examples(fetched_urls: np.ndarray, cfg: CrawlConfig
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """(features, popularity-target) pairs for training a learned URL ranker
+    (recsys-family integration: ranking URL 'items')."""
+    from repro.core.ranker import url_features
+    urls = jnp.asarray(fetched_urls.astype(np.uint32))
+    x = url_features(urls, cfg)
+    y = W.popularity(urls, cfg)
+    return x, y

@@ -1,0 +1,17 @@
+"""Jit'd wrapper with impl dispatch for the bloom probe+insert kernel."""
+from functools import partial
+
+import jax
+
+from repro.kernels.bloom.bloom import bloom_probe_insert
+from repro.kernels.bloom.ref import bloom_ref
+
+
+@partial(jax.jit, static_argnames=("k", "impl", "url_tile"))
+def probe_insert(bits, urls, mask, *, k: int, impl: str = "ref",
+                 url_tile: int = 256):
+    """bits (R, 2^b) uint8, urls/mask (R, M) -> (seen (R, M) bool, bits')."""
+    if impl == "ref":
+        return bloom_ref(bits, urls, mask, k=k, url_tile=url_tile)
+    return bloom_probe_insert(bits, urls, mask, k=k, url_tile=url_tile,
+                              interpret=(impl == "interpret"))

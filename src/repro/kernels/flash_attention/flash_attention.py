@@ -1,0 +1,101 @@
+"""Flash attention Pallas TPU kernel — the LM family's compute hot spot.
+
+Two-pass online-softmax tiling [FlashAttention, arXiv:2205.14135] adapted to
+the TPU memory hierarchy: Q/K/V stream HBM -> VMEM in MXU-aligned blocks
+(multiples of 128 on the matmul dims); the running (m, l, acc) state lives in
+VMEM scratch across the KV grid dimension (the "revisit output block"
+pattern). GQA is handled by the ops.py index maps (no KV repeat is ever
+materialized).
+
+Validated with interpret=True on CPU against ref.py; compiled path targets
+TPU (Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            n_kv_blocks: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))   # (bq, 1)
+    p = jnp.exp(s - m_new)                                       # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, group: int = 1,
+                    interpret: bool = False) -> jax.Array:
+    """q: (BHq, Sq, hd); k, v: (BHkv, Skv, hd) with BHq = BHkv * group.
+
+    Returns (BHq, Sq, hd) in q.dtype. Block sizes must divide Sq/Skv and be
+    MXU-aligned (128) for the compiled TPU path.
+    """
+    BHq, Sq, hd = q.shape
+    BHkv, Skv = k.shape[0], k.shape[1]
+    assert BHq == BHkv * group
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    nq, nk = Sq // block_q, Skv // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_kv_blocks=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BHq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BHq, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((block_q, hd), jnp.float32),   # running accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

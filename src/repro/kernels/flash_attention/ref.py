@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash attention kernel (naive materialized
+softmax — only run at test shapes)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, group: int = 1) -> jax.Array:
+    """Same contract as flash_attention.flash_attention."""
+    BHq, Sq, hd = q.shape
+    kr = jnp.repeat(k, group, axis=0)
+    vr = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, kr.shape[1]), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, vr.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,68 @@
+"""Frontier top-k select Pallas TPU kernel — the URL allocator's hot loop.
+
+Per domain row: find the k highest-priority valid URLs and invalidate their
+slots (pop semantics). The row's priority lane (capacity x f32, <=16 KiB)
+lives in VMEM; selection is k rounds of masked max+argmax — for the small k
+of a fetch batch this beats a full sort (XLA's top_k lowers to sort) and
+fuses the invalidation writeback into the same VMEM residency.
+
+Grid is (R,); one row per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -3e38
+
+
+def _kernel(url_ref, pri_ref, valid_ref, sel_url_ref, sel_pri_ref,
+            sel_mask_ref, pri_out_ref, valid_out_ref, *, k: int):
+    pri = jnp.where(valid_ref[0], pri_ref[0], NEG)       # (C,) f32
+    urls = url_ref[0]
+    C = pri.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (C,), 0)
+    valid_new = valid_ref[0]
+    for j in range(k):
+        m = pri.max()
+        # first index achieving the max
+        idx = jnp.min(jnp.where(pri == m, iota, C))
+        ok = m > NEG * 0.5
+        sel_url_ref[0, j] = jnp.where(ok, urls[jnp.minimum(idx, C - 1)], 0)
+        sel_pri_ref[0, j] = m
+        sel_mask_ref[0, j] = ok
+        hit = (iota == idx) & ok
+        pri = jnp.where(hit, NEG, pri)
+        valid_new = valid_new & ~hit
+    pri_out_ref[0] = pri
+    valid_out_ref[0] = valid_new
+
+
+def frontier_select(url, pri, valid, *, k: int, interpret: bool = False):
+    """url/pri/valid: (R, C). Returns (sel_url, sel_pri, sel_mask (R,k),
+    pri', valid')."""
+    R, C = url.shape
+    kernel = functools.partial(_kernel, k=k)
+    return pl.pallas_call(
+        kernel,
+        grid=(R,),
+        in_specs=[pl.BlockSpec((1, C), lambda r: (r, 0))] * 3,
+        out_specs=[
+            pl.BlockSpec((1, k), lambda r: (r, 0)),
+            pl.BlockSpec((1, k), lambda r: (r, 0)),
+            pl.BlockSpec((1, k), lambda r: (r, 0)),
+            pl.BlockSpec((1, C), lambda r: (r, 0)),
+            pl.BlockSpec((1, C), lambda r: (r, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, k), url.dtype),
+            jax.ShapeDtypeStruct((R, k), jnp.float32),
+            jax.ShapeDtypeStruct((R, k), jnp.bool_),
+            jax.ShapeDtypeStruct((R, C), jnp.float32),
+            jax.ShapeDtypeStruct((R, C), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(url, pri, valid)

@@ -1,0 +1,15 @@
+"""Jit'd wrapper with impl dispatch for the frontier select kernel."""
+from functools import partial
+
+import jax
+
+from repro.kernels.frontier_select.frontier_select import frontier_select
+from repro.kernels.frontier_select.ref import select_ref
+
+
+@partial(jax.jit, static_argnames=("k", "impl"))
+def select(url, pri, valid, *, k: int, impl: str = "ref"):
+    if impl == "ref":
+        return select_ref(url, pri, valid, k=k)
+    return frontier_select(url, pri, valid, k=k,
+                           interpret=(impl == "interpret"))

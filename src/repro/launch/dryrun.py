@@ -1,0 +1,168 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   512 placeholder host devices back both the 16x16 single-pod mesh (first
+#   256) and the 2x16x16 multi-pod mesh (all 512). This file is the ONLY
+#   place the flag is set — tests/benches see the real single device.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape) cell and each production mesh:
+    jit(step, in_shardings, out_shardings).lower(*abstract_args).compile()
+then record memory_analysis() + cost_analysis() + the collective bytes parsed
+from the compiled HLO into benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json
+— the substrate for EXPERIMENTS.md §Dry-run and §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both     # every cell (slow)
+  python -m repro.launch.dryrun --list
+Each cell can also run in its own subprocess via --subprocess (isolation
+against XLA compile-cache growth when sweeping all 40 cells).
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: str,
+             variant: str = "baseline") -> dict:
+    import jax
+
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+    from benchmarks.hlo_analysis import analyze_hlo
+
+    t0 = time.time()
+    from repro.sharding import rules
+
+    if "x" in mesh_kind:                       # e.g. "32x8" mesh ablation
+        dp, tp = (int(v) for v in mesh_kind.split("x"))
+        mesh = make_production_mesh(dp=dp, tp=tp)
+    else:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    with mesh, rules.activation_mesh(mesh):
+        cell = build_cell(arch, shape, mesh, variant)
+        fn = cell.fn
+        jitted = jax.jit(fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = analyze_hlo(hlo)
+
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind, "variant": variant,
+        "n_devices": mesh.devices.size,
+        "meta": cell.meta,
+        "time_lower_s": round(t_lower, 2),
+        "time_compile_s": round(t_compile, 2),
+        "memory": _mem_dict(mem),
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll["collectives"],
+        "collective_bytes": coll["collective_bytes"],
+        "flops_counted": coll["flops"],
+        "hbm_bytes_est": coll["hbm_bytes"],
+    }
+    if out_dir:
+        import pathlib
+        p = pathlib.Path(out_dir) / mesh_kind
+        p.mkdir(parents=True, exist_ok=True)
+        suffix = "" if variant == "baseline" else f"@{variant}"
+        (p / f"{arch}__{shape}{suffix}.json").write_text(json.dumps(rec, indent=1))
+        # keep the HLO for §Perf iteration forensics
+        (p / f"{arch}__{shape}{suffix}.hlo").write_text(hlo)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if out:
+        out["total_per_device"] = (out.get("argument_size_in_bytes", 0)
+                                   + out.get("output_size_in_bytes", 0)
+                                   + out.get("temp_size_in_bytes", 0)
+                                   - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def main(argv=None):
+    from repro.configs import all_cells
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    help="single | multi | both | <dp>x<tp> (e.g. 32x8)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--crawler", action="store_true",
+                    help="also run the WebParF crawl cell")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    ap.add_argument("--subprocess", action="store_true",
+                    help="isolate each cell in a child process")
+    args = ap.parse_args(argv)
+
+    cells = all_cells()
+    if args.list:
+        for a, s in cells:
+            print(f"{a:22s} {s}")
+        return 0
+
+    todo = cells if args.all else [(args.arch, args.shape)]
+    if args.crawler or args.all:
+        todo = list(todo) + [("webparf", "crawl_step")]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    failures = []
+    for mesh_kind in meshes:
+        for arch, shape in todo:
+            tag = f"[{mesh_kind}] {arch} x {shape}"
+            try:
+                if args.subprocess:
+                    import subprocess
+                    r = subprocess.run(
+                        [sys.executable, "-m", "repro.launch.dryrun",
+                         "--arch", arch, "--shape", shape,
+                         "--mesh", mesh_kind, "--out", args.out],
+                        capture_output=True, text=True, timeout=3600)
+                    ok = r.returncode == 0
+                    print(("PASS " if ok else "FAIL ") + tag)
+                    if not ok:
+                        print(r.stdout[-4000:], r.stderr[-4000:])
+                        failures.append(tag)
+                else:
+                    rec = run_cell(arch, shape, mesh_kind, args.out)
+                    mb = rec["memory"].get("total_per_device", 0) / 2 ** 20
+                    print(f"PASS {tag}: {mb:.0f} MiB/dev, "
+                          f"{rec['cost'].get('flops', 0):.3g} flops(ca), "
+                          f"{rec['collective_bytes']:.3g} coll B, "
+                          f"compile {rec['time_compile_s']:.0f}s")
+            except Exception:
+                print("FAIL " + tag)
+                traceback.print_exc()
+                failures.append(tag)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print("  " + f)
+        return 1
+    print("\nall cells passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,42 @@
+"""Production mesh definitions.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import; smoke
+tests see 1 device).
+
+Target hardware: TPU v5e pods — 256 chips/pod in a 16x16 ICI torus.
+  single-pod: (16, 16)      axes ("data", "model")
+  multi-pod:  (2, 16, 16)   axes ("pod", "data", "model")  = 512 chips
+
+Hardware constants used by the roofline (benchmarks/roofline.py):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e per-chip roofline constants
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW = 50e9                   # B/s per link
+HBM_BYTES = 16 * 2 ** 30        # 16 GiB per chip
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         dp: int = 16, tp: int = 16) -> jax.sharding.Mesh:
+    """Default: (16,16) single pod / (2,16,16) multi-pod. dp/tp reshape the
+    in-pod grid for mesh-geometry ablations (e.g. 32x8 — §Perf)."""
+    shape = (2, dp, tp) if multi_pod else (dp, tp)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Whatever this host actually has — used by examples/tests."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh(
+        (n // model, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))

@@ -1,0 +1,72 @@
+"""Batched serving driver: prefill a batch of prompts, then decode tokens.
+
+Demonstrates the inference path the decode_* dry-run cells lower, actually
+executing on host devices with a reduced config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --batch 4 \
+      --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch, get_reduced
+    from repro.models import transformer as T
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)[0] if args.full else get_reduced(args.arch)
+    assert cfg.family == "lm", "serve is for the LM family"
+    key = jax.random.PRNGKey(args.seed)
+    params = T.init_lm(key, cfg)
+
+    max_len = args.prompt_len + args.gen
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+
+    prefill = jax.jit(lambda p, t: T.prefill_step(p, cfg, t))
+    decode = jax.jit(lambda p, t, c: T.decode_step(p, cfg, t, c))
+
+    t0 = time.time()
+    logits, cache = prefill(params, prompts)
+    # grow the cache to max_len (prefill returns a seq_len cache)
+    pad = max_len - args.prompt_len
+
+    def grow(x):
+        if x is None or x.ndim != 5:
+            return x
+        return jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+
+    cache = T.LMCache(grow(cache.prefix_k), grow(cache.prefix_v),
+                      grow(cache.main_k), grow(cache.main_v), cache.length)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    out = [tok]
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(tok)
+    toks = np.asarray(jnp.concatenate(out, axis=1))
+    dt = time.time() - t0
+    print(f"{args.arch}: generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("sample:", toks[0][:16])
+    assert not np.isnan(toks).any()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

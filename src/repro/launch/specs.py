@@ -1,0 +1,407 @@
+"""Dry-run cell builders: (arch x input-shape) -> lowerable artifacts.
+
+``build_cell(arch, shape_name, mesh)`` returns a Cell with:
+  * fn            — the step function to lower (train_step / prefill /
+                    serve_step / crawl dispatch step)
+  * args          — abstract arguments (ShapeDtypeStruct pytrees, built with
+                    jax.eval_shape — NO device allocation happens here)
+  * in_shardings  — NamedSharding pytree matching args
+  * out_shardings — None (XLA propagates) except where memory layout matters
+
+All shapes pad ragged public dataset sizes (Cora's 2708 nodes etc.) up to
+mesh-divisible multiples, exactly as the real input pipeline would.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, get_shape
+from repro.configs.base import (CrawlConfig, GNNConfig, LMConfig, RecSysConfig,
+                                ShapeSpec)
+from repro.sharding import rules
+from repro.optim import adafactor, adamw
+from repro.train.trainer import TrainState, init_train_state, make_train_step
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _dp(mesh) -> tuple:
+    return rules.dp_axes(mesh)
+
+
+def _dp_size(mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in _dp(mesh)]))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def _lm_optimizer(cfg: LMConfig):
+    # Arctic (477B) trains with Adafactor: factored 2nd moment is what makes
+    # the optimizer fit 16 GB/chip (DESIGN.md §5); others use AdamW. The 33B
+    # dense model also gets bf16 moments for the same budget.
+    if cfg.name.startswith("arctic"):
+        return adafactor(lr=1e-3)
+    if cfg.n_params > 20e9:
+        return adamw(lr=3e-4, state_dtype=jnp.bfloat16)
+    return adamw(lr=3e-4, state_dtype=jnp.float32)
+
+
+def _lm_microbatches(cfg: LMConfig, B: int, S: int, dp: int) -> int:
+    """Gradient-accumulation factor so the per-layer remat stash
+    (L x B/dp x S x d bf16) stays under ~8 GiB/device."""
+    stash = cfg.n_layers * (B // dp) * S * cfg.d_model * 2
+    budget = 8 * 2 ** 30
+    mb = 1
+    while stash / mb > budget and mb < B // dp:
+        mb *= 2
+    return mb
+
+
+def _lm_state_shapes(cfg: LMConfig, opt):
+    from repro.models import transformer as T
+
+    def mk():
+        params = T.init_lm(jax.random.PRNGKey(0), cfg)
+        return init_train_state(params, opt)
+
+    return jax.eval_shape(mk)
+
+
+def _lm_state_shardings(state_shape: TrainState, mesh: Mesh):
+    pspecs = rules.lm_specs(state_shape.params, mesh)
+    ospecs = rules.opt_state_specs(state_shape.opt_state, pspecs, mesh)
+    return TrainState(pspecs, ospecs, NamedSharding(mesh, P()))
+
+
+def _lm_cell(arch: str, cfg: LMConfig, shape: ShapeSpec, mesh: Mesh,
+             variant: str = "baseline") -> Cell:
+    from repro.models import transformer as T
+
+    opt_v = variant == "opt"
+    if opt_v and cfg.moe is not None:
+        # beyond-paper: tighter MoE capacity (quality-neutral at 64-128
+        # experts per the MegaBlocks/Switch ablations)
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    B, S = shape["global_batch"], shape["seq_len"]
+    dp = _dp(mesh)
+    n_groups = _dp_size(mesh)
+    meta = dict(family="lm", n_params=cfg.n_params,
+                n_active_params=cfg.n_active_params, variant=variant)
+
+    if shape.kind == "train":
+        opt = _lm_optimizer(cfg)
+        state_shape = _lm_state_shapes(cfg, opt)
+        state_sh = _lm_state_shardings(state_shape, mesh)
+        # gather-once is only affordable when the TP-sharded full parameter
+        # set fits HBM: P_bf16/tp <= ~6 GiB (coder 4.1 GiB yes; arctic
+        # 60 GiB NO — refuted hypothesis, EXPERIMENTS.md hillclimb #2)
+        gather_ok = opt_v and cfg.n_params * 2 / mesh.shape["model"] < 6e9
+        resharding = None
+        if gather_ok:
+            gathered = rules.drop_fsdp(state_sh.params, mesh)
+            resharding = lambda params: jax.tree.map(
+                lambda x, g: jax.lax.with_sharding_constraint(x, g),
+                params, gathered)
+
+        def loss_fn(params, batch):
+            # NOTE: causal block-skip uses a dynamic-trip fori_loop, which
+            # reverse-mode autodiff rejects — it is a prefill/serve-only
+            # optimization (EXPERIMENTS.md hillclimb #2 iter 3)
+            return T.lm_loss(params, cfg, batch["tokens"], batch["labels"],
+                             n_groups=n_groups)
+
+        mb = _lm_microbatches(cfg, B, S, _dp_size(mesh))
+        meta["microbatches"] = mb
+        meta["gather_once"] = bool(gather_ok)
+        step = make_train_step(loss_fn, opt, microbatches=mb,
+                               param_resharding=resharding)
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        batch_sh = {"tokens": _ns(mesh, dp, None), "labels": _ns(mesh, dp, None)}
+        metrics_sh = {"loss": _ns(mesh), "grad_norm": _ns(mesh), "step": _ns(mesh)}
+        return Cell(arch, shape.name, step, (state_shape, batch),
+                    (state_sh, batch_sh), (state_sh, metrics_sh), meta)
+
+    params_shape = jax.eval_shape(
+        lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+    params_sh = rules.lm_specs(params_shape, mesh)
+
+    if shape.kind == "prefill":
+        def fn(params, tokens):
+            return T.prefill_step(params, cfg, tokens, n_groups=n_groups,
+                                  causal_skip=opt_v)
+
+        tokens = _sds((B, S), jnp.int32)
+        return Cell(arch, shape.name, fn, (params_shape, tokens),
+                    (params_sh, _ns(mesh, dp, None)), None, meta)
+
+    # decode: one new token against a KV cache of S slots
+    assert shape.kind == "decode"
+    cache_shape = jax.eval_shape(lambda: T.init_cache(cfg, B, S))
+
+    if B >= _dp_size(mesh):
+        kv_spec = P(None, dp, None, "model", None)       # batch-DP + SP
+        tok_spec, len_spec = P(dp, None), P(dp)
+    else:
+        kv_spec = P(None, None, None, dp + ("model",), None)  # pure SP
+        tok_spec, len_spec = P(None, None), P(None)
+
+    def cache_sh(leaf):
+        if leaf is None:
+            return None
+        if leaf.ndim == 5:
+            return NamedSharding(mesh, rules._guard(kv_spec, leaf.shape, mesh))
+        return NamedSharding(mesh, rules._guard(P(*tuple(len_spec)), leaf.shape, mesh))
+
+    cache_shardings = jax.tree.map(cache_sh, cache_shape,
+                                   is_leaf=lambda x: x is None)
+
+    def fn(params, tokens, cache):
+        return T.decode_step(params, cfg, tokens, cache, n_groups=n_groups)
+
+    tokens = _sds((B, 1), jnp.int32)
+    return Cell(arch, shape.name, fn, (params_shape, tokens, cache_shape),
+                (params_sh, NamedSharding(mesh, tok_spec), cache_shardings),
+                None, meta)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _gnn_cell(arch: str, cfg: GNNConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    from repro.models import gnn as G
+
+    dp = _dp(mesh)
+    dpn = _dp_size(mesh)
+    opt = adamw(lr=5e-3)
+    meta = dict(family="gnn")
+
+    if shape.kind in ("full_graph", "minibatch"):
+        if shape.kind == "full_graph":
+            N = _pad_to(shape["n_nodes"], dpn)
+            E = _pad_to(shape["n_edges"], dpn)
+        else:
+            from repro.data.sampler import _block_max_edges, _block_max_nodes
+            fan = (shape["fanout0"], shape["fanout1"])
+            N = _pad_to(_block_max_nodes(shape["batch_nodes"], fan), dpn)
+            E = _pad_to(_block_max_edges(shape["batch_nodes"], fan), dpn)
+        F = shape["d_feat"]
+        C = shape["n_classes"]
+        graph = G.Graph(
+            features=_sds((N, F), jnp.float32),
+            src=_sds((E,), jnp.int32), dst=_sds((E,), jnp.int32),
+            edge_mask=_sds((E,), jnp.bool_),
+            labels=_sds((N,), jnp.int32), label_mask=_sds((N,), jnp.bool_))
+        gsh = G.Graph(
+            features=_ns(mesh, dp, None), src=_ns(mesh, dp), dst=_ns(mesh, dp),
+            edge_mask=_ns(mesh, dp), labels=_ns(mesh, dp),
+            label_mask=_ns(mesh, dp))
+        loss = partial(G.gat_loss, cfg=cfg)
+        init = lambda: init_train_state(
+            G.init_gat(jax.random.PRNGKey(0), cfg, F, C), opt)
+        step = make_train_step(lambda p, b: G.gat_loss(p, cfg, b), opt)
+    else:  # batched_graphs
+        Bt = shape["batch"]
+        n, e, F, C = shape["n_nodes"], shape["n_edges"], shape["d_feat"], shape["n_classes"]
+        graph = G.Graph(
+            features=_sds((Bt, n, F), jnp.float32),
+            src=_sds((Bt, e), jnp.int32), dst=_sds((Bt, e), jnp.int32),
+            edge_mask=_sds((Bt, e), jnp.bool_),
+            labels=_sds((Bt, n), jnp.int32), label_mask=_sds((Bt, n), jnp.bool_))
+        gsh = jax.tree.map(lambda _: _ns(mesh, dp), graph)
+        init = lambda: init_train_state(
+            G.init_gat(jax.random.PRNGKey(0), cfg, F, C), opt)
+        step = make_train_step(lambda p, b: G.gat_batched_loss(p, cfg, b), opt)
+
+    state_shape = jax.eval_shape(init)
+    pspecs = rules.gnn_specs(state_shape.params, mesh)
+    ospecs = rules.opt_state_specs(state_shape.opt_state, pspecs, mesh)
+    state_sh = TrainState(pspecs, ospecs, NamedSharding(mesh, P()))
+    metrics_sh = {"loss": _ns(mesh), "grad_norm": _ns(mesh), "step": _ns(mesh)}
+    return Cell(arch, shape.name, step, (state_shape, graph), (state_sh, gsh),
+                (state_sh, metrics_sh), meta)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+def _recsys_batch_shapes(cfg: RecSysConfig, shape: ShapeSpec, mesh: Mesh):
+    """ShapeDtypeStructs + shardings mirroring models.recsys.make_batch."""
+    from repro.models import recsys as R
+
+    dp = _dp(mesh)
+    B = shape.get("batch", 2)
+    rep = NamedSharding(mesh, P())
+    bsh: dict = {}
+    sh: dict = {}
+    k = cfg.kind
+    i32 = jnp.int32
+
+    def add(name, shp, dtype, spec):
+        bsh[name] = _sds(shp, dtype)
+        sh[name] = NamedSharding(mesh, spec)
+
+    if k == "bert4rec":
+        add("items", (B, cfg.seq_len), i32, P(dp, None))
+        if shape.kind == "train":
+            add("mask_pos", (B, R.N_MASK), i32, P(dp, None))
+            add("targets", (B, R.N_MASK), i32, P(dp, None))
+            add("neg_samples", (R.N_NEG,), i32, P())
+        if shape.kind == "retrieval":
+            add("candidates", (shape["n_candidates"],), i32, P(dp))
+            sh["items"] = rep
+            bsh["items"] = _sds((B, cfg.seq_len), i32)
+    elif k == "dien":
+        bspec = P(dp, None) if B >= _dp_size(mesh) else P(None, None)
+        vspec = P(dp) if B >= _dp_size(mesh) else P()
+        add("hist_items", (B, cfg.seq_len), i32, bspec)
+        add("hist_cats", (B, cfg.seq_len), i32, bspec)
+        bsh["hist_mask"] = _sds((B, cfg.seq_len), jnp.bool_)
+        sh["hist_mask"] = NamedSharding(mesh, bspec)
+        add("user", (B,), i32, vspec)
+        add("target_item", (B,), i32, vspec)
+        add("target_cat", (B,), i32, vspec)
+        if shape.kind == "train":
+            add("label", (B,), jnp.float32, vspec)
+        if shape.kind == "retrieval":
+            add("candidates", (shape["n_candidates"],), i32, P(dp))
+            add("cand_cats", (shape["n_candidates"],), i32, P(dp))
+    elif k == "wide_deep":
+        onehot = [n for n in sorted(cfg.tables) if n not in cfg.multi_hot]
+        bspec = P(dp, None) if B >= _dp_size(mesh) else P(None, None)
+        add("sparse_ids", (B, len(onehot)), i32, bspec)
+        bsh["bag_ids"] = {n: _sds((B, bag), i32)
+                          for n, bag in cfg.multi_hot.items()}
+        sh["bag_ids"] = {n: NamedSharding(mesh, bspec)
+                         for n in cfg.multi_hot}
+        add("wide_ids", (B, R.N_WIDE_CROSS), i32, bspec)
+        if shape.kind == "train":
+            add("label", (B,), jnp.float32,
+                P(dp) if B >= _dp_size(mesh) else P())
+        if shape.kind == "retrieval":
+            add("candidates", (shape["n_candidates"],), i32, P(dp))
+    elif k == "dcn_v2":
+        bspec = P(dp, None) if B >= _dp_size(mesh) else P(None, None)
+        add("dense", (B, cfg.n_dense), jnp.float32, bspec)
+        add("sparse_ids", (B, cfg.n_sparse), i32, bspec)
+        if shape.kind == "train":
+            add("label", (B,), jnp.float32,
+                P(dp) if B >= _dp_size(mesh) else P())
+        if shape.kind == "retrieval":
+            add("candidates", (shape["n_candidates"],), i32, P(dp))
+    return bsh, sh
+
+
+def _recsys_cell(arch: str, cfg: RecSysConfig, shape: ShapeSpec,
+                 mesh: Mesh, variant: str = "baseline") -> Cell:
+    from repro.models import recsys as R
+
+    meta = dict(family="recsys", total_rows=cfg.total_rows, variant=variant)
+    params_shape = jax.eval_shape(
+        lambda: R.INIT[cfg.kind](jax.random.PRNGKey(0), cfg))
+    pspecs = rules.recsys_specs(params_shape, mesh)
+    if variant == "opt" and cfg.kind == "bert4rec" and shape.kind != "train":
+        # serve-path optimization: the (1M, 64) item table is only 256 MB —
+        # replicate it for scoring so the chunked top-k never gathers table
+        # chunks per scan step; only the batch is sharded
+        pspecs = dict(pspecs)
+        pspecs["item"] = NamedSharding(mesh, P())
+        pspecs["pos"] = NamedSharding(mesh, P())
+    batch, batch_sh = _recsys_batch_shapes(cfg, shape, mesh)
+
+    if shape.kind == "train":
+        opt = adamw(lr=1e-3)
+        state_shape = jax.eval_shape(
+            lambda: init_train_state(
+                R.INIT[cfg.kind](jax.random.PRNGKey(0), cfg), opt))
+        ospecs = rules.opt_state_specs(state_shape.opt_state, pspecs, mesh)
+        state_sh = TrainState(pspecs, ospecs, NamedSharding(mesh, P()))
+        step = make_train_step(
+            lambda p, b: R.TRAIN_LOSS[cfg.kind](p, cfg, b), opt)
+        metrics_sh = {"loss": _ns(mesh), "grad_norm": _ns(mesh),
+                      "step": _ns(mesh)}
+        return Cell(arch, shape.name, step, (state_shape, batch),
+                    (state_sh, batch_sh), (state_sh, metrics_sh), meta)
+
+    fn_map = R.SERVE if shape.kind == "serve" else R.RETRIEVAL
+    fn = lambda p, b: fn_map[cfg.kind](p, cfg, b)
+    return Cell(arch, shape.name, fn, (params_shape, batch),
+                (pspecs, batch_sh), None, meta)
+
+
+# ---------------------------------------------------------------------------
+# WebParF crawl cell (the paper's own system on the production mesh)
+# ---------------------------------------------------------------------------
+
+def _crawl_cell(arch: str, cfg: CrawlConfig, shape: ShapeSpec,
+                mesh: Mesh) -> Cell:
+    from repro.core import crawler as CR
+
+    axes = _dp(mesh)
+    n_shards = _dp_size(mesh)
+    local = CR.make_crawl_step(cfg, n_shards=n_shards, axes=axes)
+    specs = CR.state_specs(axes)
+    rep_specs = CR.FetchReport(P(axes), P(axes))
+
+    def fn(state):
+        return jax.shard_map(partial(local, dispatch=True), mesh=mesh,
+                             in_specs=(specs,), out_specs=(specs, rep_specs),
+                             check_vma=False)(state)
+
+    state_shape = jax.eval_shape(lambda: CR.init_state(cfg, n_shards))
+    state_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    return Cell(arch, shape.name, fn, (state_shape,), (state_sh,), None,
+                dict(family="crawl"))
+
+
+# ---------------------------------------------------------------------------
+# Entry
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               variant: str = "baseline") -> Cell:
+    cfg, _ = get_arch(arch)
+    shape = get_shape(arch, shape_name)
+    if getattr(cfg, "family", None) == "lm":
+        return _lm_cell(arch, cfg, shape, mesh, variant)
+    if getattr(cfg, "family", None) == "gnn":
+        return _gnn_cell(arch, cfg, shape, mesh)
+    if getattr(cfg, "family", None) == "recsys":
+        return _recsys_cell(arch, cfg, shape, mesh, variant)
+    if getattr(cfg, "family", None) == "crawl":
+        return _crawl_cell(arch, cfg, shape, mesh)
+    raise ValueError(f"unknown family for {arch}")

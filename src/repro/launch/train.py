@@ -1,0 +1,168 @@
+"""End-to-end training driver.
+
+Runs on whatever devices the host has (the production mesh is exercised by
+dryrun.py; this driver actually executes). The LM path feeds on the WebParF
+crawl — the paper's system as the data substrate:
+
+  crawl N steps -> fetched pages -> token stream -> train
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 50
+  PYTHONPATH=src python -m repro.launch.train --arch dcn-v2 --steps 20
+  PYTHONPATH=src python -m repro.launch.train --arch gat-cora --steps 30
+Reduced configs are used by default (--full for the published config — only
+sensible on a real pod).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def crawl_corpus(crawl_cfg, steps: int, mesh):
+    """Run the WebParF crawler and return the fetched URL set (the crawled
+    collection feeding the index/training, paper §IV.B)."""
+    import jax
+    from repro.core import crawler as CR
+
+    init, step_f, step_d = CR.make_spmd_crawler(crawl_cfg, mesh, axes=("data",))
+    state = init()
+    fetched = []
+    for t in range(steps):
+        fn = step_d if (t + 1) % crawl_cfg.dispatch_interval == 0 else step_f
+        state, rep = fn(state)
+        m = np.asarray(rep.fetched_mask)
+        fetched.append(np.asarray(rep.fetched_urls)[m])
+    return np.concatenate(fetched), state
+
+
+def train_lm(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch, get_reduced
+    from repro.configs.base import scaled
+    from repro.data.pipeline import lm_batches
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as T
+    from repro.optim import adamw, warmup_cosine
+    from repro.train import checkpoint as ckpt
+    from repro.train.trainer import init_train_state, make_train_step
+
+    cfg = get_arch(args.arch)[0] if args.full else get_reduced(args.arch)
+    if not args.full:
+        cfg = scaled(cfg, dtype="float32")     # bf16 ulp too coarse at toy lr
+    mesh = make_host_mesh(model=args.model_parallel)
+
+    from repro.configs import get_reduced as _gr
+    crawl_cfg = _gr("webparf")
+    urls, _ = crawl_corpus(crawl_cfg, args.crawl_steps, mesh)
+    print(f"crawled {len(urls)} pages -> token stream")
+
+    params = T.init_lm(jax.random.PRNGKey(args.seed), cfg)
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"{args.arch}: {n_params/1e6:.2f}M params (reduced={not args.full})")
+
+    opt = adamw(lr=warmup_cosine(args.lr, 10, args.steps))
+    loss_fn = lambda p, b: T.lm_loss(p, cfg, b[0], b[1])
+    step = jax.jit(make_train_step(loss_fn, opt, microbatches=args.microbatches))
+    state = init_train_state(params, opt)
+
+    batches = list(lm_batches(urls, crawl_cfg, batch=args.batch,
+                              seq_len=args.seq_len, vocab=cfg.vocab_size))
+    if not batches:
+        raise SystemExit("not enough crawled data; raise --crawl-steps")
+    t0 = time.time()
+    i = 0
+    while i < args.steps:
+        for b in batches:
+            if i >= args.steps:
+                break
+            state, m = step(state, b)
+            i += 1
+            if i % args.log_every == 0:
+                dt = time.time() - t0
+                print(f"step {i:5d}  loss {float(m['loss']):.4f}  "
+                      f"gnorm {float(m['grad_norm']):.3f}  "
+                      f"{i * args.batch * args.seq_len / dt:.0f} tok/s")
+            if args.ckpt_dir and i % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, i, state)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, i, state)
+    print(f"final loss {float(m['loss']):.4f}")
+    return state
+
+
+def train_other(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch, get_reduced
+    from repro.models import gnn as G
+    from repro.models import recsys as R
+    from repro.configs.base import ShapeSpec
+    from repro.optim import adamw
+    from repro.train.trainer import init_train_state, make_train_step
+
+    cfg = get_arch(args.arch)[0] if args.full else get_reduced(args.arch)
+    key = jax.random.PRNGKey(args.seed)
+
+    if cfg.family == "gnn":
+        import numpy as np
+        rng = np.random.default_rng(args.seed)
+        N, E, F, C = 256, 1024, 32, 7
+        g = G.Graph(
+            features=jnp.asarray(rng.normal(size=(N, F)), jnp.float32),
+            src=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+            dst=jnp.asarray(rng.integers(0, N, E), jnp.int32),
+            edge_mask=jnp.ones(E, bool),
+            labels=jnp.asarray(rng.integers(0, C, N), jnp.int32),
+            label_mask=jnp.asarray(rng.random(N) < 0.3))
+        params = G.init_gat(key, cfg, F, C)
+        loss_fn = lambda p, b: G.gat_loss(p, cfg, b)
+        batch = g
+    else:
+        params = R.INIT[cfg.kind](key, cfg)
+        shape = ShapeSpec("t", "train", dict(batch=args.batch))
+        batch = R.make_batch(cfg, shape)
+        loss_fn = lambda p, b: R.TRAIN_LOSS[cfg.kind](p, cfg, b)
+
+    opt = adamw(lr=args.lr)
+    step = jax.jit(make_train_step(loss_fn, opt))
+    state = init_train_state(params, opt)
+    for i in range(1, args.steps + 1):
+        state, m = step(state, batch)
+        if i % args.log_every == 0:
+            print(f"step {i:5d}  loss {float(m['loss']):.4f}")
+    print(f"final loss {float(m['loss']):.4f}")
+    return state
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--crawl-steps", type=int, default=60)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    from repro.configs import get_arch
+    cfg, _ = get_arch(args.arch)
+    if cfg.family == "lm":
+        train_lm(args)
+    else:
+        train_other(args)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,14 @@
+"""From-scratch optimizers (no optax in this container): AdamW, Adafactor,
+schedules, global-norm clipping. The interface mirrors optax so the trainer
+is optimizer-agnostic:
+
+    opt = adamw(lr=3e-4)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from repro.optim.adamw import adamw, sgd_momentum
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import warmup_cosine, constant
+from repro.optim.common import (Optimizer, apply_updates, clip_by_global_norm,
+                                global_norm)

@@ -1,0 +1,65 @@
+"""Adafactor [arXiv:1804.04235] — factored second moment: O(n+m) state for an
+(n, m) matrix instead of O(nm). The memory-sane choice for the 477B Arctic
+config (EXPERIMENTS.md memory table)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.common import Optimizer, resolve_lr
+
+
+class AdafactorState(NamedTuple):
+    count: jax.Array
+    vr: object     # row second-moment (or full v for <2D leaves)
+    vc: object     # col second-moment (or None sentinel zeros)
+
+
+def adafactor(lr=1e-2, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if factored(p) \
+                else jnp.zeros(p.shape, jnp.float32)
+
+        def vc(p):
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+                if factored(p) else jnp.zeros((1,), jnp.float32)
+
+        return AdafactorState(jnp.zeros((), jnp.int32),
+                              jax.tree.map(vr, params), jax.tree.map(vc, params))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        lr_t = resolve_lr(lr, c)
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+
+        def upd(g, vr, vc):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if g.ndim >= 2:
+                vr2 = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc2 = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr2[..., None] / jnp.maximum(
+                    vr2.mean(axis=-1, keepdims=True)[..., None], eps)) * vc2[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            else:
+                vr2 = beta * vr + (1 - beta) * g2
+                vc2 = vc
+                u = g * jax.lax.rsqrt(jnp.maximum(vr2, eps))
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, vr2, vc2
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), AdafactorState(c, pick(1), pick(2))
+
+    return Optimizer(init, update)

@@ -1,0 +1,68 @@
+"""AdamW with configurable moment dtype (bf16 moments fit 480B-class models
+on a 16 GB/chip pod — see sharding notes in DESIGN.md §5)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.common import Optimizer, resolve_lr
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: object
+    v: object
+
+
+def adamw(lr=1e-3, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(z, params), jax.tree.map(z, params))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        lr_t = resolve_lr(lr, c)
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            step = lr_t * (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            if weight_decay:
+                step = step + lr_t * weight_decay * p.astype(jnp.float32)
+            return -step, m2.astype(state_dtype), v2.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state.m, state.v, params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, AdamWState(c, m, v)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    count: jax.Array
+    mom: object
+
+
+def sgd_momentum(lr=1e-2, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return MomentumState(jnp.zeros((), jnp.int32),
+                             jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params))
+
+    def update(grads, state, params):
+        c = state.count + 1
+        lr_t = resolve_lr(lr, c)
+        mom = jax.tree.map(lambda b, g: momentum * b + g.astype(jnp.float32),
+                           state.mom, grads)
+        updates = jax.tree.map(lambda b: -lr_t * b, mom)
+        return updates, MomentumState(c, mom)
+
+    return Optimizer(init, update)

@@ -1,0 +1,248 @@
+"""Per-architecture PartitionSpec rules for the production mesh.
+
+Mesh axes (launch/mesh.py): single-pod ("data", "model") = (16, 16);
+multi-pod ("pod", "data", "model") = (2, 16, 16).
+
+Parallelism layout (DESIGN.md §5):
+  * batch / frontier shards  -> DP over ("pod","data") (all data axes)
+  * FSDP (ZeRO-3 param+opt sharding) -> in-pod "data" axis only (params are
+    replicated across pods; cross-pod traffic is gradient all-reduce only)
+  * TP (heads/FFN columns/vocab/embedding rows) -> "model"
+  * EP (MoE experts) -> "model"
+  * SP (long-context KV) -> "model", or ("data","model") when batch=1
+
+Rules are path-based matchers over the parameter pytree, so they apply to
+any of the five LM configs (scanned layers get a leading L axis) and to the
+recsys/GNN families uniformly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """All data-parallel axes (includes 'pod' when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+# ---------------------------------------------------------------------------
+# Activation-sharding context: models call ``constrain(x, "dp", None, "tp")``
+# at layer boundaries; outside a mesh context this is a no-op, under the
+# production mesh it pins XLA's intermediate sharding decisions (without it,
+# the SPMD partitioner is free to replicate the batch axis — observed on the
+# qwen2 train_4k baseline, EXPERIMENTS.md §Perf iteration 1).
+# ---------------------------------------------------------------------------
+
+_ACT = {"mesh": None, "dp": None, "tp": None}
+
+
+def set_activation_mesh(mesh: Optional[Mesh], tp: str = "model"):
+    if mesh is None:
+        _ACT.update(mesh=None, dp=None, tp=None)
+    else:
+        _ACT.update(mesh=mesh, dp=dp_axes(mesh), tp=tp)
+
+
+class activation_mesh:
+    def __init__(self, mesh, tp: str = "model"):
+        self.mesh, self.tp = mesh, tp
+
+    def __enter__(self):
+        self.prev = dict(_ACT)
+        set_activation_mesh(self.mesh, self.tp)
+
+    def __exit__(self, *a):
+        _ACT.update(self.prev)
+
+
+def constrain(x: jax.Array, *pattern):
+    """pattern entries: "dp", "tp", None, or a concrete axis name. Dims whose
+    size is not divisible by the mesh axes are left unconstrained."""
+    mesh = _ACT["mesh"]
+    if mesh is None:
+        return x
+    spec = tuple(_ACT[p] if p in ("dp", "tp") else p for p in pattern)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _guard(P(*spec), x.shape, mesh)))
+
+
+def fsdp_axis(mesh: Mesh) -> str:
+    return "data"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return dim % n == 0
+
+
+def _guard(spec: P, shape, mesh: Mesh) -> P:
+    """Drop any spec axis that doesn't divide the dimension (safety net for
+    odd head counts etc.); replaced axes become replicated."""
+    fixed = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        fixed.append(axes if _divisible(dim, mesh, axes) else None)
+    return P(*fixed)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+_LM_RULES = [
+    # (path regex, spec WITHOUT the scan-stacked leading axis)
+    # vocab-parallel embedding (Megatron convention). A d-sharded table
+    # trips an XLA SPMD dynamic-slice bug when the gather sits inside the
+    # grad-accumulation scan, and tied-embedding models need vocab sharding
+    # anyway for vocab-parallel xent.
+    (r"embed$",                         P("model", None)),
+    (r"lm_head$",                       P(None, "model")),
+    (r"final_norm$",                    P()),
+    (r"attn/w[qkv]$",                   P("data", "model")),
+    (r"attn/wo$",                       P("model", "data")),
+    (r"attn/b[qkv]$",                   P("model")),
+    (r"(mlp|shared|dense)/w_(gate|up)$", P("data", "model")),
+    (r"(mlp|shared|dense)/w_down$",     P("model", "data")),
+    (r"moe/router$",                    P("data", None)),
+    (r"moe/w_(gate|up)$",               P("model", "data", None)),   # EP + FSDP
+    (r"moe/w_down$",                    P("model", None, "data")),
+    (r"ln[12]$",                        P()),
+]
+
+
+def lm_param_spec(path, leaf, mesh: Mesh) -> P:
+    s = _path_str(path)
+    stacked = s.startswith("layers/")        # scan-stacked: leading L axis
+    for pat, spec in _LM_RULES:
+        if re.search(pat, s):
+            full = P(*((None,) + tuple(spec))) if stacked else spec
+            return _guard(full, leaf.shape, mesh)
+    return P()
+
+
+def lm_specs(params_shape, mesh: Mesh):
+    # tied embeddings (no lm_head leaf): the table must be VOCAB-sharded so
+    # the (transposed) head is vocab-parallel — otherwise the xent backward
+    # all-gathers full-vocab logits (4.7 GiB/step at qwen2 train_4k)
+    tied = "lm_head" not in params_shape
+
+    def spec(p, l):
+        s = _path_str(p)
+        if tied and re.search(r"embed$", s):
+            return NamedSharding(mesh, _guard(P("model", None), l.shape, mesh))
+        return NamedSharding(mesh, lm_param_spec(p, l, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def recsys_param_spec(path, leaf, mesh: Mesh) -> P:
+    s = _path_str(path)
+    if re.search(r"tables/|^wide$|/wide$|^item$|^category$|^user$|^pos$", s):
+        # embedding tables: row-sharded over model (the memory hot spot)
+        return _guard(P("model"), leaf.shape, mesh)
+    if leaf.ndim == 2:
+        # Megatron-style alternating col/row parallel — but ONLY for wide
+        # layers (>=512): TP on a d=64 BERT4Rec block just buys per-layer
+        # all-reduces of the whole activation (135 GiB/step at serve_bulk)
+        m = re.search(r"w(\d+)$", s)
+        if m and int(m.group(1)) % 2 == 1 and leaf.shape[0] >= 512:
+            return _guard(P("model", None), leaf.shape, mesh)
+        if leaf.shape[1] >= 512:
+            return _guard(P(None, "model"), leaf.shape, mesh)
+        return P()
+    if leaf.ndim == 1 and leaf.shape[0] >= 512:
+        return _guard(P("model"), leaf.shape, mesh)
+    return P()
+
+
+def recsys_specs(params_shape, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, recsys_param_spec(p, l, mesh)),
+        params_shape)
+
+
+# ---------------------------------------------------------------------------
+# GNN family (tiny params -> replicate; data arrays are what shard)
+# ---------------------------------------------------------------------------
+
+def gnn_specs(params_shape, mesh: Mesh):
+    return jax.tree.map(lambda l: NamedSharding(mesh, P()), params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state: follows the parameter spec with rank adjustments
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(opt_state_shape, param_shardings, mesh: Mesh):
+    """Build shardings for AdamW/Adafactor/momentum states given parameter
+    shardings. Adam moments share the param spec; Adafactor factored moments
+    drop the corresponding trailing axis; scalars replicate."""
+    from repro.optim.adafactor import AdafactorState
+    from repro.optim.adamw import AdamWState, MomentumState
+
+    rep = NamedSharding(mesh, P())
+
+    def like_params(tree):
+        return jax.tree.map(lambda _, s: s, tree, param_shardings)
+
+    if isinstance(opt_state_shape, AdamWState):
+        return AdamWState(rep, like_params(opt_state_shape.m),
+                          like_params(opt_state_shape.v))
+    if isinstance(opt_state_shape, MomentumState):
+        return MomentumState(rep, like_params(opt_state_shape.mom))
+    if isinstance(opt_state_shape, AdafactorState):
+        def vr_spec(leaf, shard):
+            spec = shard.spec
+            if len(spec) > len(leaf.shape):            # factored: dropped last
+                spec = P(*tuple(spec)[: len(leaf.shape)])
+            return NamedSharding(mesh, _guard(spec, leaf.shape, mesh))
+
+        def vc_spec(leaf, shard):
+            spec = tuple(shard.spec)
+            if len(leaf.shape) >= 1 and len(spec) >= 2:
+                spec = spec[:-2] + spec[-1:]
+            spec = spec[: len(leaf.shape)]
+            return NamedSharding(mesh, _guard(P(*spec), leaf.shape, mesh))
+
+        vr = jax.tree.map(vr_spec, opt_state_shape.vr, param_shardings)
+        vc = jax.tree.map(vc_spec, opt_state_shape.vc, param_shardings)
+        return AdafactorState(rep, vr, vc)
+    # unknown optimizer: replicate
+    return jax.tree.map(lambda _: rep, opt_state_shape)
+
+
+def drop_fsdp(shardings, mesh: Mesh):
+    """Replace the FSDP ('data') axis with replication in a sharding pytree —
+    the 'gather parameters once per step' layout (P/tp resident per device).
+    Used by the optimized train variants: XLA hoists the single all-gather
+    out of the microbatch loop instead of re-gathering per microbatch."""
+    def fix(ns):
+        spec = tuple(ns.spec)
+        new = tuple(None if a == "data" else a for a in spec)
+        return NamedSharding(mesh, P(*new))
+    return jax.tree.map(fix, shardings,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))

@@ -1,0 +1,130 @@
+"""Checkpoint / restore — the fault-tolerance substrate.
+
+Design points for 1000+-node deployments (DESIGN.md §5):
+  * full-state checkpoints: params + optimizer + data/crawl state + step, so
+    a restart is bitwise-resumable;
+  * atomic commit (write to tmp dir, fsync, rename) — a crash mid-save never
+    corrupts the latest checkpoint;
+  * keep-last-N retention;
+  * **elastic restore**: arrays are saved UNSHARDED (gathered) with their
+    pytree paths; `restore(..., shardings=...)` device_puts every leaf onto
+    the *target* mesh, which may have a different shape than the mesh that
+    saved — re-mesh/rescale is a restore-time concern only.
+
+Format: one .npz per checkpoint (path-keyed) + a small JSON manifest. No
+orbax in this container; this is a complete stand-in.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_fmt(p) for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        flat[key] = arr
+    return flat
+
+
+def _fmt(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep: int = 3) -> str:
+    """Atomically write checkpoint `step`. Returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": int(step),
+            "keys": sorted(flat),
+            "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+            "shapes": {k: list(v.shape) for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # atomic commit
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, target: Any, *, step: Optional[int] = None,
+            shardings: Any = None) -> Any:
+    """Restore onto the structure of `target`. `shardings` (same pytree
+    structure, jax.sharding.Sharding leaves or None) places every leaf on the
+    target mesh — pass shardings built from a DIFFERENT mesh than the saver's
+    to rescale elastically."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
+    keys = [_SEP.join(_fmt(p) for p in path_) for path_, _ in leaves]
+    shard_leaves = (jax.tree_util.tree_leaves(
+        shardings, is_leaf=lambda x: x is None or hasattr(x, "device_set"))
+        if shardings is not None else [None] * len(leaves))
+
+    out = []
+    for key, (path_, leaf), shd in zip(keys, leaves, shard_leaves):
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[key]
+        tgt_dtype = jnp.asarray(leaf).dtype if leaf is not None else arr.dtype
+        val = jnp.asarray(arr).astype(tgt_dtype)
+        out.append(jax.device_put(val, shd) if shd is not None else val)
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,103 @@
+"""Fault tolerance & elasticity harness.
+
+Three mechanisms (DESIGN.md §5), all demonstrated in tests/benchmarks:
+
+1. **Checkpoint/restart** — `run_with_failures` drives any step function
+   with injected failures; on failure it restores the last checkpoint and
+   continues. Validates exact-resume (bitwise-equal final state vs a run
+   without failures when steps are deterministic).
+
+2. **Crawler domain rebalance (C4)** — a dead crawl shard's domains are
+   remapped and their frontier/bloom rows migrated (core/partitioner.py,
+   crawler.apply_rebalance). `heal_crawler` packages the control-plane
+   decision.
+
+3. **Elastic re-mesh** — checkpoints are mesh-free (gathered); `reshard`
+   places a restored state onto a new mesh of any shape. Scale 256 -> 512
+   chips (or down to whatever survives) without conversion tooling.
+
+Straggler mitigation: the crawler's dispatch treats a straggling shard like a
+temporarily dead one — it is skipped for one exchange round (its URLs stay
+staged) instead of stalling the collective; `mark_dead`/`revive` model this.
+Synchronous train steps rely on checkpoint/restart + re-mesh, the standard
+TPU-pod posture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class FailurePlan:
+    """Deterministic failure schedule: steps at which the 'cluster' dies
+    after computing (but before checkpointing) that step."""
+    fail_at: Tuple[int, ...] = ()
+
+
+def run_with_failures(step_fn: Callable, state, batches: Iterable, *,
+                      ckpt_dir: str, ckpt_every: int = 10,
+                      plan: FailurePlan = FailurePlan(),
+                      state_step: Callable = lambda s: int(s.step)) -> Any:
+    """Drive step_fn(state, batch) -> (state, metrics) with failure
+    injection + restart. Batches must be re-iterable from any step index
+    (list or factory) for deterministic replay."""
+    batches = list(batches)
+    ckpt.save(ckpt_dir, state_step(state), state)
+    failed = set(plan.fail_at)
+    i = state_step(state)
+    while i < len(batches):
+        state, _ = step_fn(state, batches[i])
+        i += 1
+        if i in failed:
+            failed.discard(i)          # each failure fires once
+            # crash before persisting: roll back to last checkpoint
+            state = ckpt.restore(ckpt_dir, state)
+            i = state_step(state)
+            continue
+        if i % ckpt_every == 0:
+            ckpt.save(ckpt_dir, i, state)
+    return state
+
+
+def reshard(tree, mesh, spec_tree):
+    """Place a (host or anywhere) pytree onto `mesh` with PartitionSpecs from
+    spec_tree (same structure; None = replicate). The elastic-rescale
+    primitive: works for any mesh shape."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    def put(x, spec):
+        s = NamedSharding(mesh, spec if spec is not None else P())
+        return jax.device_put(x, s)
+
+    return jax.tree.map(put, tree, spec_tree,
+                        is_leaf=lambda x: x is None or not isinstance(x, (dict, list, tuple)))
+
+
+def heal_crawler(state, cfg, dead_shards, n_shards: int):
+    """Control-plane healing for the crawler: rebalance domains of dead
+    shards onto survivors (load-balanced), migrate rows. Returns new state."""
+    from repro.core import crawler as CR
+    from repro.core import partitioner as PT
+
+    loads = np.asarray(state.f_valid.sum(axis=1))
+    per = cfg.n_slots // n_shards
+    shard_loads = loads.reshape(n_shards, per).sum(axis=1).astype(np.float64)
+    dm = PT.DomainMap(state.slot_of_domain, state.slot_domain,
+                      jnp.ones((n_shards,), bool))
+    new_dm = PT.rebalance(dm, list(dead_shards), loads=shard_loads)
+    return CR.apply_rebalance(state, cfg, new_dm)
+
+
+def revive(state, shard_ids):
+    """Bring shards back (straggler recovered / replacement node joined)."""
+    alive = state.shard_alive
+    for s in shard_ids:
+        alive = alive.at[s].set(True)
+    return state._replace(shard_alive=alive)

@@ -1,0 +1,102 @@
+"""Checkpoint/restore + fault-tolerance harness tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import adamw
+from repro.train import checkpoint as C
+from repro.train.fault import FailurePlan, run_with_failures
+from repro.train.trainer import init_train_state, make_train_step
+
+
+@pytest.fixture
+def tiny():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (4, 2)), "b": jnp.zeros((2,))}
+    X = jax.random.normal(key, (16, 4))
+    y = X @ jnp.ones((4, 2))
+    opt = adamw(lr=1e-2)
+    step = jax.jit(make_train_step(
+        lambda p, b: jnp.mean((b[0] @ p["w"] + p["b"] - b[1]) ** 2), opt))
+    return params, opt, step, (X, y)
+
+
+def test_roundtrip_exact(tiny, tmp_path):
+    params, opt, step, batch = tiny
+    state = init_train_state(params, opt)
+    state, _ = step(state, batch)
+    C.save(str(tmp_path), 1, state)
+    r = C.restore(str(tmp_path), state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention_and_latest(tiny, tmp_path):
+    params, opt, step, batch = tiny
+    state = init_train_state(params, opt)
+    for s in [1, 2, 3, 4, 5]:
+        C.save(str(tmp_path), s, state, keep=2)
+    assert C.all_steps(str(tmp_path)) == [4, 5]
+    assert C.latest_step(str(tmp_path)) == 5
+
+
+def test_no_tmp_dirs_left(tiny, tmp_path):
+    params, opt, step, batch = tiny
+    C.save(str(tmp_path), 1, init_train_state(params, opt))
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp_")]
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        C.restore(str(tmp_path / "nope"), {"a": jnp.zeros(1)})
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    C.save(str(tmp_path), 0, {"w": jnp.ones((3,), jnp.float32)})
+    r = C.restore(str(tmp_path), {"w": jnp.zeros((3,), jnp.bfloat16)})
+    assert r["w"].dtype == jnp.bfloat16
+
+
+def test_failure_replay_bitwise(tiny, tmp_path):
+    params, opt, step, batch = tiny
+    state = init_train_state(params, opt)
+    batches = [batch] * 25
+    clean = run_with_failures(step, state, batches,
+                              ckpt_dir=str(tmp_path / "a"), ckpt_every=5)
+    faulty = run_with_failures(step, state, batches,
+                               ckpt_dir=str(tmp_path / "b"), ckpt_every=5,
+                               plan=FailurePlan(fail_at=(3, 12, 21)))
+    for a, b in zip(jax.tree.leaves(clean), jax.tree.leaves(faulty)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_crawler_heal_and_revive():
+    """Shard death -> rebalance -> revive keeps crawling (single device)."""
+    import jax
+    from repro.configs import get_reduced
+    from repro.core import crawler as CR
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.fault import heal_crawler, revive
+
+    cfg = get_reduced("webparf")
+    mesh = make_host_mesh()
+    n = mesh.shape["data"]
+    init, step_f, step_d = CR.make_spmd_crawler(cfg, mesh)
+    state = init()
+    for t in range(4):
+        state, _ = (step_d if t == 3 else step_f)(state)
+    state = CR.mark_dead(state, [0])
+    assert not bool(state.shard_alive[0])
+    if n > 1:
+        state = heal_crawler(state, cfg, [0], n)
+        assert int(state.slot_of_domain.max()) < cfg.n_slots
+    else:
+        with pytest.raises(ValueError):
+            heal_crawler(state, cfg, [0], n)
+    state = revive(state, [0])
+    assert bool(state.shard_alive[0])
+    state, rep = step_f(state)
+    assert int(np.asarray(rep.fetched_mask).sum()) > 0

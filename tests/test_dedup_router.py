@@ -1,0 +1,124 @@
+"""Dedup (Bloom + exact) and router invariants — unit + hypothesis."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dedup as DD
+from repro.core import router as RT
+
+
+# ---------------------------------------------------------------------------
+# Bloom filter
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 2 ** 24), min_size=1, max_size=64, unique=True))
+def test_bloom_no_false_negatives(urls):
+    """Anything inserted is ALWAYS found (C1 depends on this)."""
+    b = DD.init_bloom(1, 14)
+    u = jnp.asarray([urls], jnp.uint32)
+    m = jnp.ones((1, len(urls)), bool)
+    _, b = DD.probe_insert(b, u, m, k=4)
+    seen, _ = DD.probe_insert(b, u, m, k=4)
+    assert bool(seen.all())
+
+
+def test_bloom_first_probe_unseen():
+    b = DD.init_bloom(2, 14)
+    u = jnp.asarray([[1, 2, 3], [4, 5, 6]], jnp.uint32)
+    m = jnp.ones((2, 3), bool)
+    seen, b = DD.probe_insert(b, u, m, k=4)
+    assert not bool(seen.any())
+
+
+def test_bloom_rows_independent():
+    b = DD.init_bloom(2, 14)
+    u = jnp.asarray([[42]], jnp.uint32)
+    _, b = DD.probe_insert(b, jnp.asarray([[42], [0]], jnp.uint32),
+                           jnp.asarray([[True], [False]]), k=4)
+    seen, _ = DD.probe_insert(b, jnp.asarray([[42], [42]], jnp.uint32),
+                              jnp.ones((2, 1), bool), k=4)
+    assert bool(seen[0, 0]) and not bool(seen[1, 0])
+
+
+def test_bloom_fp_rate_sane():
+    rng = np.random.default_rng(0)
+    b = DD.init_bloom(1, 14)                 # 16384 bits
+    ins = jnp.asarray([rng.integers(0, 1 << 22, 400)], jnp.uint32)
+    _, b = DD.probe_insert(b, ins, jnp.ones((1, 400), bool), k=4)
+    probe = jnp.asarray([rng.integers(1 << 22, 1 << 23, 2000)], jnp.uint32)
+    seen, _ = DD.probe_insert(b, probe, jnp.ones((1, 2000), bool), k=4)
+    fp = float(seen.mean())
+    # analytic ~ (1-e^{-4*400/16384})^4 ~ 0.007
+    assert fp < 0.05, fp
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 100), min_size=0, max_size=40))
+def test_exact_dedup_first_occurrence(vals):
+    u = jnp.asarray([vals], jnp.uint32) if vals else jnp.zeros((1, 0), jnp.uint32)
+    m = jnp.ones((1, len(vals)), bool)
+    keep = np.asarray(DD.exact_dedup(u, m))[0]
+    seen = set()
+    for v, k in zip(vals, keep):
+        if v not in seen:
+            assert k, (vals, keep)
+            seen.add(v)
+        else:
+            assert not k, (vals, keep)
+
+
+def test_exact_dedup_respects_mask():
+    u = jnp.asarray([[5, 5, 7]], jnp.uint32)
+    m = jnp.asarray([[False, True, True]])
+    keep = np.asarray(DD.exact_dedup(u, m))[0]
+    assert list(keep) == [False, True, True]
+
+
+# ---------------------------------------------------------------------------
+# Router (shared MoE/crawler dispatch primitive)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=64),
+       st.integers(1, 16))
+def test_position_in_bucket_properties(dests, cap):
+    d = jnp.asarray(dests, jnp.int32)
+    slot, keep = RT.position_in_bucket(d, 8, cap)
+    slot, keep = np.asarray(slot), np.asarray(keep)
+    # arrival order preserved, slots unique per destination, capacity respected
+    per = {}
+    for i, (dst, s, k) in enumerate(zip(dests, slot, keep)):
+        assert s == per.get(dst, 0)          # cumsum = arrival order
+        per[dst] = per.get(dst, 0) + 1
+        assert k == (s < cap)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=32))
+def test_pack_buckets_conservation(dests):
+    cap = 8
+    payload = jnp.arange(1, len(dests) + 1, dtype=jnp.uint32)[:, None]
+    d = jnp.asarray(dests, jnp.int32)
+    buckets, mask, dropped = RT.pack_buckets(payload, d, 4, cap)
+    total = int(mask.sum()) + int(dropped)
+    assert total == len(dests)
+    # every kept payload value appears exactly once in the buckets
+    vals = np.asarray(buckets[..., 0])[np.asarray(mask)]
+    assert len(set(vals.tolist())) == len(vals)
+    assert set(vals.tolist()) <= set(range(1, len(dests) + 1))
+
+
+def test_pack_buckets_destinations_correct():
+    payload = jnp.asarray([[10], [20], [30]], jnp.uint32)
+    d = jnp.asarray([2, 0, 2], jnp.int32)
+    buckets, mask, dropped = RT.pack_buckets(payload, d, 3, 4)
+    b = np.asarray(buckets[..., 0])
+    assert b[2, 0] == 10 and b[2, 1] == 30 and b[0, 0] == 20
+    assert int(dropped) == 0
+
+
+def test_moe_capacity_rounding():
+    assert RT.moe_capacity(1024, 2, 8, 1.25) % 8 == 0
+    assert RT.moe_capacity(8, 1, 64, 1.0) == 8   # floor

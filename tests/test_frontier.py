@@ -1,0 +1,109 @@
+"""Frontier invariants — unit + hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import frontier as F
+
+
+def mk(R=2, C=16):
+    return F.init_frontier(R, C)
+
+
+def test_insert_then_select_ordering():
+    f = mk(1, 16)
+    urls = jnp.asarray([[10, 11, 12, 13]], jnp.uint32)
+    scores = jnp.asarray([[0.1, 0.9, 0.5, 0.95]], jnp.float32)
+    f = F.insert(f, urls, scores, jnp.ones((1, 4), bool), n_buckets=8)
+    got, pri, mask, f = F.select(f, 4)
+    got = np.asarray(got)[0]
+    assert mask.all()
+    # bucketed priority: 0.9/0.95 share the top bucket -> FIFO: 11 before 13
+    assert list(got) == [11, 13, 12, 10]
+
+
+def test_fifo_within_bucket():
+    f = mk(1, 16)
+    urls = jnp.asarray([[1, 2, 3]], jnp.uint32)
+    scores = jnp.full((1, 3), 0.5)          # same bucket
+    f = F.insert(f, urls, scores, jnp.ones((1, 3), bool), n_buckets=4)
+    got, _, mask, _ = F.select(f, 3)
+    assert list(np.asarray(got)[0]) == [1, 2, 3]
+
+
+def test_capacity_overflow_counted():
+    f = mk(1, 4)
+    urls = jnp.arange(8, dtype=jnp.uint32)[None]
+    f = F.insert(f, urls, jnp.full((1, 8), 0.5), jnp.ones((1, 8), bool),
+                 n_buckets=4)
+    assert int(f.n_dropped[0]) == 4
+    assert int(f.valid.sum()) == 4
+
+
+def test_select_empties_row():
+    f = mk(1, 8)
+    f = F.insert(f, jnp.arange(3, dtype=jnp.uint32)[None],
+                 jnp.full((1, 3), 0.5), jnp.ones((1, 3), bool), n_buckets=4)
+    _, _, m1, f = F.select(f, 8)
+    assert int(m1.sum()) == 3
+    _, _, m2, _ = F.select(f, 8)
+    assert int(m2.sum()) == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 2 ** 20),
+                          st.floats(0.0, 0.96875, width=32)),
+                min_size=0, max_size=24),
+       st.integers(1, 8))
+def test_property_conservation(items, k):
+    """inserted = selectable + dropped; no URL invented or lost."""
+    C = 12
+    f = mk(1, C)
+    if items:
+        urls = jnp.asarray([[u for u, _ in items]], jnp.uint32)
+        scores = jnp.asarray([[s for _, s in items]], jnp.float32)
+        f = F.insert(f, urls, scores, jnp.ones((1, len(items)), bool),
+                     n_buckets=8)
+    kept = int(f.valid.sum())
+    dropped = int(f.n_dropped[0])
+    assert kept + dropped == len(items)
+    assert kept <= C
+    got, pri, mask, f2 = F.select(f, k)
+    n_sel = int(mask.sum())
+    assert n_sel == min(k, kept)
+    # selected URLs were actually inserted
+    inserted = {u for u, _ in items}
+    for u, m in zip(np.asarray(got)[0], np.asarray(mask)[0]):
+        if m:
+            assert int(u) in inserted
+    # selection removed exactly n_sel
+    assert int(f2.valid.sum()) == kept - n_sel
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10), st.integers(0, 10))
+def test_property_priority_monotone(n_hi, n_lo):
+    """High-bucket URLs always pop before low-bucket ones."""
+    f = mk(1, 32)
+    urls_hi = jnp.arange(100, 100 + n_hi, dtype=jnp.uint32)[None]
+    urls_lo = jnp.arange(200, 200 + n_lo, dtype=jnp.uint32)[None]
+    if n_lo:
+        f = F.insert(f, urls_lo, jnp.full((1, n_lo), 0.1),
+                     jnp.ones((1, n_lo), bool), n_buckets=8)
+    if n_hi:
+        f = F.insert(f, urls_hi, jnp.full((1, n_hi), 0.9),
+                     jnp.ones((1, n_hi), bool), n_buckets=8)
+    got, _, mask, _ = F.select(f, n_hi + n_lo + 2)
+    got = [int(u) for u, m in zip(np.asarray(got)[0], np.asarray(mask)[0]) if m]
+    assert got == list(range(100, 100 + n_hi)) + list(range(200, 200 + n_lo))
+
+
+def test_multi_row_independence():
+    f = mk(3, 8)
+    urls = jnp.asarray([[1], [2], [3]], jnp.uint32)
+    f = F.insert(f, urls, jnp.full((3, 1), 0.5), jnp.ones((3, 1), bool),
+                 n_buckets=4)
+    got, _, mask, _ = F.select(f, 1)
+    assert list(np.asarray(got)[:, 0]) == [1, 2, 3]
+    assert mask.all()

@@ -1,0 +1,135 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bloom.ops import probe_insert
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.frontier_select.ops import select
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Hq,Hkv,S,hd", [
+    (1, 2, 2, 128, 32),
+    (2, 4, 2, 128, 64),
+    (1, 8, 1, 256, 64),     # MQA
+    (2, 6, 2, 192, 32),     # group=3, non-pow2 S
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Hq, Hkv, S, hd, causal, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + hd), 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), dtype)
+    ref = attention(q, k, v, causal=causal, impl="ref")
+    out = attention(q, k, v, causal=causal, impl="interpret",
+                    block_q=64, block_k=64)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_size_invariance():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (1, 2, 256, 32))
+    k = jax.random.normal(ks[1], (1, 2, 256, 32))
+    v = jax.random.normal(ks[2], (1, 2, 256, 32))
+    a = attention(q, k, v, causal=True, impl="interpret", block_q=64, block_k=64)
+    b = attention(q, k, v, causal=True, impl="interpret", block_q=128, block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# bloom
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,M,b,k", [
+    (1, 256, 10, 2), (4, 256, 12, 4), (2, 512, 14, 3), (8, 512, 11, 5),
+])
+def test_bloom_sweep(R, M, b, k):
+    bits = jnp.zeros((R, 1 << b), jnp.uint8)
+    urls = jnp.asarray(RNG.integers(0, 1 << 24, (R, M)), jnp.uint32)
+    mask = jnp.asarray(RNG.random((R, M)) < 0.7)
+    s_ref, b_ref = probe_insert(bits, urls, mask, k=k, impl="ref")
+    s_pal, b_pal = probe_insert(bits, urls, mask, k=k, impl="interpret")
+    assert (np.asarray(s_ref) == np.asarray(s_pal)).all()
+    assert (np.asarray(b_ref) == np.asarray(b_pal)).all()
+
+
+def test_bloom_incremental_matches_batch():
+    """Inserting in two batches == inserting once (state composition)."""
+    bits = jnp.zeros((1, 1 << 12), jnp.uint8)
+    u = jnp.asarray(RNG.integers(0, 1 << 20, (1, 128)), jnp.uint32)
+    m = jnp.ones((1, 128), bool)
+    _, b_once = probe_insert(bits, u, m, k=3, impl="interpret")
+    _, b1 = probe_insert(bits, u[:, :64], m[:, :64], k=3, impl="interpret")
+    _, b2 = probe_insert(b1, u[:, 64:], m[:, 64:], k=3, impl="interpret")
+    assert (np.asarray(b_once) == np.asarray(b2)).all()
+
+
+# ---------------------------------------------------------------------------
+# frontier_select
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,C,k", [(1, 32, 1), (4, 64, 4), (2, 128, 8),
+                                   (8, 256, 16)])
+def test_frontier_select_sweep(R, C, k):
+    url = jnp.asarray(RNG.integers(0, 1 << 24, (R, C)), jnp.uint32)
+    pri = jnp.asarray(RNG.normal(size=(R, C)) * 50, jnp.float32)
+    valid = jnp.asarray(RNG.random((R, C)) < 0.5)
+    ref = select(url, pri, valid, k=k, impl="ref")
+    pal = select(url, pri, valid, k=k, impl="interpret")
+    # priorities, masks, and post-state valid/priority must agree exactly
+    # (ties may select different equal-priority URLs)
+    np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(pal[1]))
+    np.testing.assert_array_equal(np.asarray(ref[2]), np.asarray(pal[2]))
+    assert int(ref[4].sum()) == int(pal[4].sum())
+    # selected priorities are the true top-k of valid entries, descending
+    masked = np.where(np.asarray(valid), np.asarray(pri), -np.inf)
+    want = -np.sort(-masked, axis=1)[:, :k]
+    got = np.where(np.asarray(pal[2]), np.asarray(pal[1]), -np.inf)
+    np.testing.assert_allclose(np.where(np.isfinite(want), want, -3e38), got,
+                               rtol=1e-6)
+
+
+def test_frontier_select_pop_semantics():
+    url = jnp.asarray([[1, 2, 3, 4]], jnp.uint32)
+    pri = jnp.asarray([[4.0, 3.0, 2.0, 1.0]])
+    valid = jnp.ones((1, 4), bool)
+    _, p1, m1, pri2, valid2 = select(url, pri, valid, k=2, impl="interpret")
+    _, p2, m2, _, _ = select(url, pri2, valid2, k=2, impl="interpret")
+    assert list(np.asarray(p1)[0]) == [4.0, 3.0]
+    assert list(np.asarray(p2)[0]) == [2.0, 1.0]
+
+
+# ---------------------------------------------------------------------------
+# packed bloom variant (8x VMEM density)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,M,b,k", [(2, 256, 12, 4), (4, 512, 11, 3)])
+def test_bloom_packed_matches_bytewise(R, M, b, k):
+    from repro.kernels.bloom.bloom import (bloom_probe_insert,
+                                           bloom_probe_insert_packed,
+                                           pack_bits, unpack_bits)
+    bits = jnp.zeros((R, 1 << b), jnp.uint8)
+    urls = jnp.asarray(RNG.integers(0, 1 << 24, (R, M)), jnp.uint32)
+    mask = jnp.asarray(RNG.random((R, M)) < 0.7)
+    s1, b1 = bloom_probe_insert(bits, urls, mask, k=k, interpret=True)
+    s2, w2 = bloom_probe_insert_packed(pack_bits(bits), urls, mask, k=k,
+                                       interpret=True)
+    assert (np.asarray(s1) == np.asarray(s2)).all()
+    assert (np.asarray(unpack_bits(w2)) == np.asarray(b1)).all()
+
+
+def test_pack_unpack_roundtrip():
+    from repro.kernels.bloom.bloom import pack_bits, unpack_bits
+    bits = jnp.asarray(RNG.integers(0, 2, (3, 1 << 10)), jnp.uint8)
+    assert (np.asarray(unpack_bits(pack_bits(bits))) == np.asarray(bits)).all()

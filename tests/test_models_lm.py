@@ -1,0 +1,155 @@
+"""LM family: per-arch smoke tests + numerical equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_reduced
+from repro.models import layers as L
+from repro.models import transformer as T
+
+LM_ARCHS = [a for a in ARCH_NAMES
+            if get_reduced(a).family == "lm"]
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_train_step(arch, rng):
+    """Reduced config: one forward+backward on CPU, shapes + no NaNs."""
+    cfg = get_reduced(arch)
+    params = T.init_lm(rng, cfg)
+    tokens = jax.random.randint(rng, (2, 32), 0, cfg.vocab_size)
+    labels = jnp.roll(tokens, -1, axis=1)
+    loss, grads = jax.value_and_grad(
+        lambda p: T.lm_loss(p, cfg, tokens, labels))(params)
+    assert np.isfinite(float(loss))
+    gn = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: float(jnp.abs(g.astype(jnp.float32)).sum()), grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_smoke_decode_shapes(arch, rng):
+    cfg = get_reduced(arch)
+    params = T.init_lm(rng, cfg)
+    B, max_len = 2, 16
+    cache = T.init_cache(cfg, B, max_len)
+    tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
+    logits, cache = T.decode_step(params, cfg, tok, cache)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+    assert int(cache.length[0]) == 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "deepseek-moe-16b"])
+def test_prefill_decode_matches_forward(arch, rng):
+    """Teacher-forced decode must reproduce full-forward logits (f32 —
+    bf16 differs only by accumulation-order noise)."""
+    from repro.configs.base import scaled
+    cfg = scaled(get_reduced(arch), dtype="float32")
+    params = T.init_lm(rng, cfg)
+    B, S = 1, 8
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+
+    hidden, _ = T.forward(params, cfg, tokens)
+    full_logits = (hidden @ T.lm_head_weight(params)).astype(jnp.float32)
+
+    cache = T.init_cache(cfg, B, S)
+    outs = []
+    for i in range(S):
+        lg, cache = T.decode_step(params, cfg, tokens[:, i: i + 1], cache)
+        outs.append(lg)
+    dec_logits = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(full_logits),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_chunked_attention_matches_naive(rng):
+    B, Hq, Hkv, S, hd = 2, 4, 2, 64, 16
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, Hq, S, hd))
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd))
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd))
+    out = L.chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    from repro.kernels.flash_attention.ops import attention
+    ref = attention(q, k, v, causal=True, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_causal_skip_equivalence(rng):
+    B, H, S, hd = 1, 2, 64, 16
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, H, S, hd))
+    v = jax.random.normal(ks[2], (B, H, S, hd))
+    a = L.chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16)
+    b = L.chunked_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=16,
+                            causal_skip=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_xent_matches_full(rng):
+    B, S, d, V = 2, 16, 8, 64
+    ks = jax.random.split(rng, 3)
+    h = jax.random.normal(ks[0], (B, S, d))
+    head = jax.random.normal(ks[1], (d, V)) * 0.2
+    labels = jax.random.randint(ks[2], (B, S), 0, V)
+    chunked = L.chunked_softmax_xent(h, head, labels, chunk=4)
+    logits = (h @ head).astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, -1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    full = (logz - gold).mean()
+    np.testing.assert_allclose(float(chunked), float(full), rtol=1e-5)
+
+
+def test_moe_routing_conservation(rng):
+    """Every kept assignment lands in exactly one bucket slot; dropped +
+    kept == T*K."""
+    from repro.configs.base import MoEConfig
+    m = MoEConfig(n_experts=8, top_k=2, d_ff_expert=16, capacity_factor=1.0)
+    T_, E = 64, 8
+    logits = jax.random.normal(rng, (1, T_, E))
+    cap = L.moe_capacity(m, T_)
+    w, e, slot, keep, aux = L.moe_dispatch(logits, m, cap)
+    assert int(keep.sum()) + int((~keep).sum()) == T_ * m.top_k
+    # weights normalized over k
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert np.isfinite(float(aux))
+
+
+def test_moe_identical_experts_equal_dense(rng):
+    """With identical experts and capacity >= T*K, MoE == the dense MLP."""
+    from repro.configs.base import LMConfig, MoEConfig
+    cfg = get_reduced("deepseek-moe-16b")
+    m = cfg.moe
+    p = L.init_moe(rng, cfg, jnp.float32)
+    # make every expert identical
+    for k in ("w_gate", "w_up", "w_down"):
+        p[k] = jnp.broadcast_to(p[k][:1], p[k].shape)
+    x = jax.random.normal(rng, (2, 8, cfg.d_model))
+    out, _ = L.moe_block(p, cfg, x, n_groups=1)
+    dense = L.mlp_block({"w_gate": p["w_gate"][0], "w_up": p["w_up"][0],
+                         "w_down": p["w_down"][0]}, x)
+    if m.n_shared:
+        dense = dense + L.mlp_block(p["shared"], x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(dense),
+                               rtol=2e-2, atol=2e-3)
+
+
+def test_rope_rotation_property(rng):
+    """RoPE: relative position invariance of q.k products."""
+    hd = 16
+    q = jax.random.normal(rng, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    def dot_at(pq, pk):
+        qr = L.apply_rope(q, jnp.full((1, 1, 1), pq, jnp.float32), 10000.0)
+        kr = L.apply_rope(k, jnp.full((1, 1, 1), pk, jnp.float32), 10000.0)
+        return float((qr * kr).sum())
+    assert abs(dot_at(3, 1) - dot_at(7, 5)) < 1e-4   # same relative offset
+    assert abs(dot_at(3, 1) - dot_at(8, 1)) > 1e-5   # different offset differs

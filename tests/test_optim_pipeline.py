@@ -1,0 +1,104 @@
+"""Optimizer math + data-pipeline tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adafactor, adamw, apply_updates, clip_by_global_norm,
+                         global_norm, sgd_momentum, warmup_cosine)
+
+
+def test_adamw_matches_closed_form_first_step():
+    """First AdamW step with bias correction == -lr * sign-ish update."""
+    p = {"w": jnp.asarray([2.0])}
+    g = {"w": jnp.asarray([0.5])}
+    opt = adamw(lr=0.1, b1=0.9, b2=0.999, eps=1e-8)
+    s = opt.init(p)
+    u, s = opt.update(g, s, p)
+    # m_hat = g, v_hat = g^2 -> step = lr * g / (|g| + eps) = lr * sign(g)
+    np.testing.assert_allclose(float(u["w"][0]), -0.1, rtol=1e-4)
+
+
+def test_weight_decay_applied():
+    p = {"w": jnp.asarray([1.0])}
+    g = {"w": jnp.asarray([0.0])}
+    opt = adamw(lr=0.1, weight_decay=0.1)
+    s = opt.init(p)
+    u, _ = opt.update(g, s, p)
+    np.testing.assert_allclose(float(u["w"][0]), -0.01, rtol=1e-5)
+
+
+def test_adafactor_factored_state_small():
+    p = {"w": jnp.ones((64, 32))}
+    opt = adafactor(lr=1e-2)
+    s = opt.init(p)
+    assert s.vr["w"].shape == (64,)
+    assert s.vc["w"].shape == (32,)
+
+
+def test_adafactor_converges_quadratic():
+    p = {"w": jnp.asarray([4.0, -3.0])}
+    opt = adafactor(lr=0.3)
+    s = opt.init(p)
+    for _ in range(150):
+        g = {"w": 2 * p["w"]}
+        u, s = opt.update(g, s, p)
+        p = apply_updates(p, u)
+    assert float(jnp.abs(p["w"]).max()) < 0.5
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, n = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(n), 5.0, rtol=1e-6)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    f = warmup_cosine(1.0, 10, 100, floor=0.1)
+    assert float(f(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(f(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(f(jnp.asarray(100))) <= 0.11
+
+
+def test_momentum_accumulates():
+    p = {"w": jnp.asarray([0.0])}
+    opt = sgd_momentum(lr=1.0, momentum=0.5)
+    s = opt.init(p)
+    g = {"w": jnp.asarray([1.0])}
+    u1, s = opt.update(g, s, p)
+    u2, s = opt.update(g, s, p)
+    np.testing.assert_allclose(float(u2["w"][0]), -1.5, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_lm_batches_shapes_and_determinism():
+    from repro.configs import get_reduced
+    from repro.data.pipeline import lm_batches
+
+    cfg = get_reduced("webparf")
+    urls = np.arange(400, dtype=np.uint32) * 1237
+    b1 = list(lm_batches(urls, cfg, batch=2, seq_len=16, vocab=128))
+    b2 = list(lm_batches(urls, cfg, batch=2, seq_len=16, vocab=128))
+    assert b1 and b1[0][0].shape == (2, 16)
+    for (t1, l1), (t2, l2) in zip(b1, b2):
+        assert (np.asarray(t1) == np.asarray(t2)).all()
+        # labels are the shifted stream
+        assert (np.asarray(t1)[:, 1:] == np.asarray(l1)[:, :-1]).all()
+    assert int(b1[0][0].max()) < 128
+
+
+def test_crawl_edges_and_ranker_examples():
+    from repro.configs import get_reduced
+    from repro.data.pipeline import crawl_edges, ranker_examples
+
+    cfg = get_reduced("webparf")
+    urls = np.arange(50, dtype=np.uint32)
+    src, dst = crawl_edges(urls, cfg)
+    assert len(src) == 50 * cfg.outlinks_per_page
+    x, y = ranker_examples(urls, cfg)
+    assert x.shape == (50, 8) and y.shape == (50,)
+    assert not bool(jnp.isnan(x).any())

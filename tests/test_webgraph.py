@@ -1,0 +1,76 @@
+"""Synthetic-web substrate invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import webgraph as W
+
+CFG = get_reduced("webparf")
+
+
+def test_determinism():
+    u = jnp.arange(1000, dtype=jnp.uint32)
+    cumw = W.zipf_cumweights(CFG)
+    a = W.outlinks(u, CFG, cumw)
+    b = W.outlinks(u, CFG, cumw)
+    assert (np.asarray(a) == np.asarray(b)).all()
+
+
+def test_domain_packing_roundtrip():
+    d = jnp.asarray([0, 3, CFG.n_domains - 1], jnp.int32)
+    local = jnp.asarray([0, 17, 12345], jnp.uint32)
+    url = W.make_url(d, local, CFG)
+    assert (np.asarray(W.domain_of(url, CFG)) == np.asarray(d)).all()
+
+
+def test_topical_locality_rate():
+    rng = np.random.default_rng(0)
+    urls = jnp.asarray(rng.integers(0, 1 << CFG.url_space_log2, 4000), jnp.uint32)
+    cumw = W.zipf_cumweights(CFG)
+    links = W.outlinks(urls, CFG, cumw)
+    src_dom = np.asarray(W.domain_of(urls, CFG))[:, None]
+    dst_dom = np.asarray(W.domain_of(links, CFG))
+    stay = (src_dom == dst_dom).mean()
+    # alpha=0.8 plus accidental in-domain cross links
+    assert 0.75 < stay < 0.9, stay
+
+
+def test_canonical_is_idempotent_and_in_domain():
+    rng = np.random.default_rng(1)
+    urls = jnp.asarray(rng.integers(0, 1 << CFG.url_space_log2, 2000), jnp.uint32)
+    c1 = W.canonical(urls, CFG)
+    c2 = W.canonical(c1, CFG)
+    assert (np.asarray(c1) == np.asarray(c2)).all()
+    assert (np.asarray(W.domain_of(c1, CFG)) == np.asarray(W.domain_of(urls, CFG))).all()
+
+
+def test_alias_fraction_roughly_matches():
+    rng = np.random.default_rng(2)
+    urls = jnp.asarray(rng.integers(0, 1 << CFG.url_space_log2, 5000), jnp.uint32)
+    changed = (np.asarray(W.canonical(urls, CFG)) != np.asarray(urls)).mean()
+    assert abs(changed - CFG.alias_fraction) < 0.02, changed
+
+
+def test_page_tokens_domain_clustered():
+    cumw = W.zipf_cumweights(CFG)
+    d0 = W.make_url(jnp.zeros((50,), jnp.int32), jnp.arange(50, dtype=jnp.uint32), CFG)
+    toks = np.asarray(W.page_tokens(d0, CFG, n_tokens=64, vocab=1024))
+    band = 1024 // CFG.n_domains
+    frac_in_band = ((toks >= 0) & (toks < band)).mean()
+    assert frac_in_band > 0.5          # 70% nominal
+
+
+def test_hub_seeds_shape_and_quality():
+    seeds = W.hub_seeds(CFG)
+    assert seeds.shape == (CFG.n_domains, CFG.seed_urls_per_domain)
+    dom = np.asarray(W.domain_of(seeds, CFG))
+    assert (dom == np.arange(CFG.n_domains)[:, None]).all()
+    pop = np.asarray(W.popularity(seeds, CFG))
+    assert pop.mean() > 0.5            # hub selection picks popular pages
+
+
+def test_popularity_range():
+    u = jnp.arange(10000, dtype=jnp.uint32)
+    p = np.asarray(W.popularity(u, CFG))
+    assert (p >= 0).all() and (p <= 1).all()
