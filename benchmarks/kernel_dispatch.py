@@ -1,0 +1,127 @@
+"""Kernel-dispatch benchmark: ref vs interpret vs pallas, per kernel and
+through the real crawl step.
+
+Every hot kernel now resolves through kernels/registry.py, so "which
+implementation serves the crawl" is a config knob; this suite (a) times the
+registered implementations of frontier_select and bloom standalone on
+production-ish shapes, (b) checks ref<->interpret bit-equivalence on those
+shapes, and (c) times the full crawl step per ``kernel_impl``. On a CPU host
+the compiled "pallas" path is skipped (Mosaic needs a TPU) and "interpret"
+is reported for validation only — its timings measure the Pallas
+interpreter, not the kernel.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def _bench(fn, *args, warmup: int = 2, iters: int = 10) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _impls():
+    import jax
+    return ("ref", "interpret", "pallas") if jax.default_backend() == "tpu" \
+        else ("ref", "interpret")
+
+
+def bench_frontier_select(R=128, C=2048, k=16):
+    import jax.numpy as jnp
+    from repro.kernels.frontier_select.ops import select
+
+    from repro.core.frontier import NEG
+
+    rng = np.random.default_rng(0)
+    url = jnp.asarray(rng.integers(0, 1 << 30, (R, C)), jnp.uint32)
+    valid = jnp.asarray(rng.random((R, C)) < 0.5)
+    # invariant the crawl state maintains (and the kernel assumes): invalid
+    # slots hold NEG priority
+    pri = jnp.where(valid,
+                    jnp.asarray(rng.normal(size=(R, C)) * 50, jnp.float32),
+                    NEG)
+
+    print(f"\n-- frontier_select (R={R}, C={C}, k={k}) --")
+    ref = None
+    for impl in _impls():
+        dt = _bench(lambda i=impl: select(url, pri, valid, k=k, impl=i))
+        out = select(url, pri, valid, k=k, impl=impl)
+        tag = ""
+        if ref is None:
+            ref = out
+        else:
+            same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                       for a, b in zip((ref[1], ref[2], ref[3], ref[4]),
+                                       (out[1], out[2], out[3], out[4])))
+            tag = "  (== ref)" if same else "  (MISMATCH vs ref)"
+        print(f"  {impl:>10s}: {dt*1e3:8.2f} ms{tag}")
+
+
+def bench_bloom(R=128, M=1024, bits_log2=16, k=4):
+    import jax.numpy as jnp
+    from repro.kernels.bloom.ops import probe_insert
+
+    rng = np.random.default_rng(1)
+    bits = jnp.zeros((R, 1 << bits_log2), jnp.uint8)
+    urls = jnp.asarray(rng.integers(0, 1 << 30, (R, M)), jnp.uint32)
+    mask = jnp.asarray(rng.random((R, M)) < 0.7)
+
+    print(f"\n-- bloom probe+insert (R={R}, M={M}, 2^{bits_log2} bits, k={k}) --")
+    ref = None
+    for impl in _impls():
+        dt = _bench(lambda i=impl: probe_insert(bits, urls, mask, k=k, impl=i))
+        out = probe_insert(bits, urls, mask, k=k, impl=impl)
+        tag = ""
+        if ref is None:
+            ref = out
+        else:
+            same = (np.array_equal(np.asarray(ref[0]), np.asarray(out[0])) and
+                    np.array_equal(np.asarray(ref[1]), np.asarray(out[1])))
+            tag = "  (== ref)" if same else "  (MISMATCH vs ref)"
+        print(f"  {impl:>10s}: {dt*1e3:8.2f} ms{tag}")
+
+
+def bench_crawl_step(steps=16):
+    from repro.configs import get_arch
+    from repro.configs.base import scaled
+
+    from benchmarks.crawl_common import run_crawl
+
+    base = scaled(get_arch("webparf")[0], n_domains=32, frontier_capacity=512,
+                  fetch_batch=32, bloom_bits_log2=16, dispatch_capacity=1024,
+                  url_space_log2=24)
+    print(f"\n-- full crawl step x{steps} per kernel_impl --")
+    for impl in _impls():
+        cfg = scaled(base, kernel_impl=impl)
+        urls, state, _, dt = run_crawl(cfg, steps)
+        print(f"  {impl:>10s}: {dt:6.2f} s  ({len(urls)/max(dt, 1e-9):8.0f}"
+              f" pages/s, {len(urls)} fetched)")
+
+
+def main():
+    import jax
+    from repro.kernels import registry
+    # importing ops modules registers every implementation
+    import repro.kernels.bloom.ops  # noqa: F401
+    import repro.kernels.flash_attention.ops  # noqa: F401
+    import repro.kernels.frontier_select.ops  # noqa: F401
+
+    print(f"backend: {jax.default_backend()}")
+    for kern in registry.kernels():
+        print(f"  {kern}: impls={registry.available(kern)} "
+              f"auto->{registry.resolve_impl(kern, 'auto')}")
+    bench_frontier_select()
+    bench_bloom()
+    bench_crawl_step()
+
+
+if __name__ == "__main__":
+    main()

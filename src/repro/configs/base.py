@@ -215,6 +215,10 @@ class CrawlConfig:
     partitioning: str = "webparf"     # "webparf" | "url_hash" | "random" (baselines)
     slot_factor: int = 2              # frontier rows per domain (spare slots so
                                       # C4 rebalancing never merges queues)
+    kernel_impl: str = "auto"         # frontier-select/bloom implementation:
+                                      # "ref" | "pallas" | "interpret" | "auto"
+                                      # (auto = Pallas on TPU, ref elsewhere;
+                                      # resolved by kernels/registry.py)
 
     @property
     def n_slots(self) -> int:

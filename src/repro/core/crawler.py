@@ -2,12 +2,13 @@
 
 One ``crawl_step`` = what every C-proc does per cycle, shard_mapped over the
 crawler mesh axes (each shard of the ``data``/(``pod``,``data``) axes is one
-crawling process):
+crawling process). The step itself is a PIPELINE of typed stages
+(core/stages.py, DESIGN.md §10):
 
-  select (URL allocator) -> fetch (document loader, simulated) -> analyze
-  (parser + domain classifier) -> stage (URL database) -> every
-  ``dispatch_interval`` steps: batched all_to_all exchange + dedup + frontier
-  insert (URL dispatcher).
+  allocate (URL allocator) -> fetch_analyze (document loader + page
+  analyzer) -> extract_stage (parser + URL database) -> every
+  ``dispatch_interval`` steps: dispatch_exchange (batched all_to_all +
+  dedup + frontier insert — the URL dispatcher).
 
 Batching the exchange is the paper's C5 claim; the interval is a config knob
 and the dispatch is a SEPARATE jitted variant (`step_dispatch`) so the
@@ -17,276 +18,69 @@ Three partitioning policies run through the same step (DESIGN.md §9):
   webparf  — domain-partitioned, content-informed canonicalization + routing
   url_hash — URL-oriented partitioning (hash of raw URL -> shard)
   random   — independent crawlers strawman (unstable destination)
+
+This module is the slim composer: it owns pipeline assembly, failure
+injection, rebalancing, and the shard_map wrapper. Stage bodies, the state
+types, and the stats plumbing live in core/stages.py; both F.select and the
+Bloom probe route through kernels/registry.py per ``cfg.kernel_impl``.
 """
 from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Callable, NamedTuple, Optional, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import CrawlConfig
 from repro.core import classifier as CLS
-from repro.core import dedup as DD
-from repro.core import frontier as F
 from repro.core import partitioner as PT
 from repro.core import ranker
-from repro.core import router as RT
-from repro.core import webgraph as W
+from repro.core import stages as ST
+# re-exported state/stat types (public API predating the stage split)
+from repro.core.stages import (CrawlState, FetchReport, NSTAT, SIDX, STATS,
+                               Stage, frontier_view, init_state, state_specs,
+                               with_frontier)
 
-# stats counters (per shard)
-STATS = ("fetched", "fetch_own", "fetch_foreign", "discovered", "dedup_exact",
-         "dedup_bloom", "staging_drop", "frontier_drop", "dispatch_sent",
-         "dispatch_recv", "dispatch_rounds", "revived")
-NSTAT = len(STATS)
-SIDX = {n: i for i, n in enumerate(STATS)}
-
-
-class CrawlState(NamedTuple):
-    # row-sharded (n_slots, ...)
-    f_url: jax.Array
-    f_pri: jax.Array
-    f_valid: jax.Array
-    f_arrival: jax.Array
-    f_dropped: jax.Array
-    f_inserted: jax.Array
-    bloom_bits: jax.Array
-    slot_domain: jax.Array       # (n_slots,) domain living in each slot
-    # shard-sharded (n_shards, ...)
-    staging_url: jax.Array       # (n_shards, S) uint32
-    staging_src: jax.Array       # (n_shards, S) int32 source-page domain
-    staging_n: jax.Array         # (n_shards,) int32
-    stats: jax.Array             # (n_shards, NSTAT) int32
-    # replicated
-    slot_of_domain: jax.Array    # (n_domains,)
-    shard_alive: jax.Array       # (n_shards,) bool
-    step: jax.Array              # () int32
-
-
-def frontier_view(s: CrawlState) -> F.Frontier:
-    return F.Frontier(s.f_url, s.f_pri, s.f_valid, s.f_arrival,
-                      s.f_dropped, s.f_inserted)
-
-
-def with_frontier(s: CrawlState, f: F.Frontier) -> CrawlState:
-    return s._replace(f_url=f.url, f_pri=f.priority, f_valid=f.valid,
-                      f_arrival=f.arrival, f_dropped=f.n_dropped,
-                      f_inserted=f.n_inserted)
-
-
-def init_state(cfg: CrawlConfig, n_shards: int) -> CrawlState:
-    assert cfg.n_domains % n_shards == 0, (cfg.n_domains, n_shards)
-    assert cfg.n_slots % n_shards == 0
-    f = PT.seed_frontier(cfg, n_shards)
-    dm = PT.identity_map(cfg, n_shards)
-    # register the seeds in the Bloom filters: without this a seed URL
-    # re-discovered via an outlink is re-inserted and crawled TWICE (the one
-    # C1 leak found by benchmarks/overlap.py at classify_accuracy=1.0)
-    bloom = DD.init_bloom(cfg.n_slots, cfg.bloom_bits_log2)
-    _, bloom = DD.probe_insert(bloom, f.url, f.valid, k=cfg.bloom_hashes)
-    S = cfg.dispatch_capacity
-    return CrawlState(
-        f_url=f.url, f_pri=f.priority, f_valid=f.valid, f_arrival=f.arrival,
-        f_dropped=f.n_dropped, f_inserted=f.n_inserted,
-        bloom_bits=bloom.bits,
-        slot_domain=dm.domain_of_slot,
-        staging_url=jnp.zeros((n_shards, S), jnp.uint32),
-        staging_src=jnp.zeros((n_shards, S), jnp.int32),
-        staging_n=jnp.zeros((n_shards,), jnp.int32),
-        stats=jnp.zeros((n_shards, NSTAT), jnp.int32),
-        slot_of_domain=dm.slot_of_domain,
-        shard_alive=dm.shard_alive,
-        step=jnp.zeros((), jnp.int32),
-    )
-
-
-def state_specs(axes) -> CrawlState:
-    """PartitionSpecs for every leaf (axes = crawler mesh axis name(s))."""
-    row = P(axes)
-    return CrawlState(
-        f_url=row, f_pri=row, f_valid=row, f_arrival=row, f_dropped=row,
-        f_inserted=row, bloom_bits=row, slot_domain=row,
-        staging_url=row, staging_src=row, staging_n=row, stats=row,
-        slot_of_domain=P(), shard_alive=P(), step=P(),
-    )
-
-
-class FetchReport(NamedTuple):
-    """Per-step observables the benchmarks consume (host-side analysis)."""
-    fetched_urls: jax.Array      # (n_slots, k_row) uint32  (0 = none)
-    fetched_mask: jax.Array      # (n_slots, k_row) bool
-
-
-def _bump(stats, name, val):
-    return stats.at[0, SIDX[name]].add(val.astype(jnp.int32))
+__all__ = [
+    "CrawlState", "FetchReport", "NSTAT", "SIDX", "STATS", "Stage",
+    "frontier_view", "with_frontier", "init_state", "state_specs",
+    "make_crawl_step", "make_spmd_crawler", "mark_dead", "apply_rebalance",
+]
 
 
 def make_crawl_step(cfg: CrawlConfig, *, n_shards: int, axes,
                     score_fn: Callable = ranker.score_urls,
-                    classify_accuracy: float = CLS.DEFAULT_ACCURACY):
-    """Build the shard-local step. Returns fn(state_local, dispatch: bool)."""
-    cumw = W.zipf_cumweights(cfg)
-    r_local = cfg.n_slots // n_shards
-    k_row = max(1, cfg.fetch_batch // r_local)
-    S = cfg.dispatch_capacity
-    cap_ex = max(8, -(-S // n_shards) * 2)      # per-destination bucket size
+                    classify_accuracy: float = CLS.DEFAULT_ACCURACY,
+                    stages: Optional[Sequence[Stage]] = None,
+                    dispatch_stage: Stage = ST.dispatch_exchange):
+    """Build the shard-local step. Returns fn(state_local, dispatch: bool).
+
+    ``stages`` overrides the per-step pipeline (default
+    ``stages.DEFAULT_PIPELINE``); the first stage must create the StepCarry
+    (``stages.allocate`` does). ``dispatch_stage`` runs only on exchange
+    steps."""
+    ctx = ST.make_context(cfg, n_shards=n_shards, axes=axes,
+                          score_fn=score_fn,
+                          classify_accuracy=classify_accuracy)
+    pipeline = ST.DEFAULT_PIPELINE if stages is None else tuple(stages)
+    assert pipeline, "crawl pipeline needs at least one stage"
 
     def local_step(state: CrawlState, *, dispatch: bool
                    ) -> Tuple[CrawlState, FetchReport]:
-        shard = lax.axis_index(axes).astype(jnp.int32)
-        alive = state.shard_alive[shard]
-        stats = state.stats
-        fr = frontier_view(state)
-
-        # ---- 1. URL allocator: pop top-k of each local domain queue, then
-        # enforce the per-process fetch budget (the downloader has
-        # ``fetch_batch`` threads — paper §IV.B.2). Candidates beyond the
-        # budget go back to their queues.
-        urls, pri, pre_sel, fr = F.select(fr, k_row)
-        if r_local * k_row > cfg.fetch_batch:
-            flat_pri = jnp.where(pre_sel, pri, F.NEG).reshape(-1)
-            kth = lax.top_k(flat_pri, cfg.fetch_batch)[0][-1]
-            budget = (flat_pri >= kth).reshape(pre_sel.shape)
-            # ties at the threshold could exceed the budget by a few URLs —
-            # acceptable (threads block briefly); give back the rest
-            over = pre_sel & ~budget
-            fr = F.insert(fr, urls, score_fn(urls, cfg), over,
-                          n_buckets=cfg.n_priority_buckets)
-            pre_sel = pre_sel & budget
-        sel = pre_sel & alive
-        # a dead shard fetches nothing — put back anything it popped so no
-        # URL is lost between failure and rebalance (C4)
-        give_back = pre_sel & ~alive
-        fr = F.insert(fr, urls, score_fn(urls, cfg), give_back,
-                      n_buckets=cfg.n_priority_buckets)
-        stats = _bump(stats, "revived", give_back.sum())
-
-        # ---- 2. document loader (simulated fetch) + page analyzer ---------
-        true_dom = CLS.page_domain(urls, cfg)                 # (r, k)
-        if cfg.partitioning == "webparf":
-            own = (true_dom == state.slot_domain[:, None]) & sel
-            foreign = sel & ~own
-        else:
-            own, foreign = sel, jnp.zeros_like(sel)
-        stats = _bump(stats, "fetched", sel.sum())
-        stats = _bump(stats, "fetch_own", own.sum())
-        stats = _bump(stats, "fetch_foreign", foreign.sum())
-
-        # ---- 3. parser: extract outlinks ----------------------------------
-        links = W.outlinks(urls, cfg, cumw)                   # (r, k, O)
-        lmask = jnp.broadcast_to(sel[..., None], links.shape)
-        lsrc = jnp.broadcast_to(true_dom[..., None], links.shape)
-        flat_u = links.reshape(-1)
-        flat_m = lmask.reshape(-1)
-        flat_s = lsrc.reshape(-1)
-        stats = _bump(stats, "discovered", flat_m.sum())
-
-        # ---- 4. dispatcher (local half): canonicalize + exact dedup -------
-        if cfg.partitioning == "webparf":
-            flat_u = W.canonical(flat_u, cfg)   # content-informed alias fold
-        before = flat_m.sum()
-        flat_m = DD.exact_dedup(flat_u[None], flat_m[None])[0]
-        stats = _bump(stats, "dedup_exact", before - flat_m.sum())
-
-        # ---- 5. stage into the URL database (batched exchange buffer) -----
-        n0 = state.staging_n[0]
-        order = jnp.cumsum(flat_m.astype(jnp.int32)) - 1
-        pos = n0 + order
-        fits = flat_m & (pos < S)
-        stats = _bump(stats, "staging_drop", (flat_m & ~fits).sum())
-        pos_safe = jnp.where(fits, pos, S)
-        su = jnp.concatenate([state.staging_url[0], jnp.zeros((1,), jnp.uint32)])
-        ss = jnp.concatenate([state.staging_src[0], jnp.zeros((1,), jnp.int32)])
-        su = su.at[pos_safe].set(jnp.where(fits, flat_u, 0))[None, :S]
-        ss = ss.at[pos_safe].set(jnp.where(fits, flat_s, 0))[None, :S]
-        sn = (n0 + fits.sum()).astype(jnp.int32)[None]
-
-        state = with_frontier(state, fr)._replace(
-            staging_url=su, staging_src=ss, staging_n=sn, stats=stats)
-
-        # ---- 6. periodic batched URL exchange (C5) ------------------------
+        carry = None
+        for stage in pipeline:
+            state, carry, delta = stage(ctx, state, carry)
+            state = ST.apply_delta(state, delta)
         if dispatch:
-            state = _dispatch(state, shard)
-
+            state, carry, delta = dispatch_stage(ctx, state, carry)
+            state = ST.apply_delta(state, delta)
         state = state._replace(step=state.step + 1)
-        return state, FetchReport(jnp.where(sel, urls, 0), sel)
-
-    def _dispatch(state: CrawlState, shard) -> CrawlState:
-        stats = state.stats
-        su, ss, n = state.staging_url[0], state.staging_src[0], state.staging_n[0]
-        # a dead process sends nothing (its staged URLs are lost — the cost
-        # of failure the paper's rebalancing bounds)
-        valid = (jnp.arange(S) < n) & state.shard_alive[shard]
-
-        # predict destination domain / shard
-        pred = CLS.predict_domain(su, ss, cfg, step=state.step,
-                                  accuracy=classify_accuracy)
-        if cfg.partitioning == "webparf":
-            slot = state.slot_of_domain[jnp.clip(pred, 0, cfg.n_domains - 1)]
-            dest = PT.shard_of_slot(slot, cfg.n_slots, n_shards)
-        elif cfg.partitioning == "url_hash":
-            dest = (W.hash2(su, 61) % jnp.uint32(n_shards)).astype(jnp.int32)
-        else:  # random — unstable destination (changes every dispatch)
-            dest = (W.hash2(su, state.step.astype(jnp.uint32) + 62)
-                    % jnp.uint32(n_shards)).astype(jnp.int32)
-
-        payload = jnp.stack([su, pred.astype(jnp.uint32),
-                             valid.astype(jnp.uint32)], axis=-1)  # (S, 3)
-        buckets, bmask, dropped = RT.pack_buckets(payload, dest, n_shards,
-                                                  cap_ex, valid=valid)
-        stats = _bump(stats, "staging_drop", dropped)
-        stats = _bump(stats, "dispatch_sent", valid.sum())
-        stats = _bump(stats, "dispatch_rounds", jnp.ones((), jnp.int32))
-
-        recv = RT.exchange(buckets, axes)                  # (n_shards, cap_ex, 3)
-        r_u = recv[..., 0].reshape(-1)
-        r_pred = recv[..., 1].reshape(-1).astype(jnp.int32)
-        r_m = recv[..., 2].reshape(-1) > 0
-        stats = _bump(stats, "dispatch_recv", r_m.sum())
-
-        # exact dedup across everything received this round
-        before = r_m.sum()
-        r_m = DD.exact_dedup(r_u[None], r_m[None])[0]
-        stats = _bump(stats, "dedup_exact", before - r_m.sum())
-
-        # local row for each received URL
-        r_slots = state.slot_domain.shape[0]               # local row count
-        if cfg.partitioning == "webparf":
-            slot = state.slot_of_domain[jnp.clip(r_pred, 0, cfg.n_domains - 1)]
-            row = slot - shard * r_slots
-            ok = (row >= 0) & (row < r_slots)
-            row = jnp.clip(row, 0, r_slots - 1)
-            r_m = r_m & ok
-        else:
-            row = (W.hash2(r_u, 63) % jnp.uint32(r_slots)).astype(jnp.int32)
-
-        # bucket per local row, Bloom-dedup, insert into the frontier
-        M = min(cap_ex * n_shards, cfg.frontier_capacity)
-        rb, rbmask, rdrop = RT.pack_buckets(r_u[:, None], row, r_slots, M,
-                                            valid=r_m)
-        rb = rb[..., 0]                                    # (r_slots, M)
-        stats = _bump(stats, "frontier_drop", rdrop)
-
-        bloom = DD.Bloom(state.bloom_bits, cfg.bloom_bits_log2)
-        seen, bloom = DD.probe_insert(bloom, rb, rbmask, k=cfg.bloom_hashes)
-        fresh = rbmask & ~seen
-        stats = _bump(stats, "dedup_bloom", (rbmask & seen).sum())
-
-        fr = frontier_view(state)
-        scores = score_fn(rb, cfg)
-        fr = F.insert(fr, rb, scores, fresh, n_buckets=cfg.n_priority_buckets)
-
-        state = with_frontier(state, fr)._replace(
-            bloom_bits=bloom.bits,
-            staging_url=jnp.zeros_like(state.staging_url),
-            staging_src=jnp.zeros_like(state.staging_src),
-            staging_n=jnp.zeros_like(state.staging_n),
-            stats=stats)
-        return state
+        return state, FetchReport(jnp.where(carry.sel, carry.urls, 0),
+                                  carry.sel)
 
     return local_step
 
@@ -329,10 +123,9 @@ def make_spmd_crawler(cfg: CrawlConfig, mesh, axes=("data",),
     rep_specs = FetchReport(P(axes_t), P(axes_t))
 
     def step(state, *, dispatch: bool):
-        fn = jax.shard_map(
+        fn = shard_map(
             partial(local, dispatch=dispatch), mesh=mesh,
-            in_specs=(specs,), out_specs=(specs, rep_specs),
-            check_vma=False)
+            in_specs=(specs,), out_specs=(specs, rep_specs))
         return fn(state)
 
     step_fetch = jax.jit(partial(step, dispatch=False))

@@ -44,20 +44,38 @@ def _bit_indices(urls: jax.Array, k: int, bits_log2: int) -> jax.Array:
     return ((h1[..., None] + i * h2[..., None]) & mask).astype(jnp.int32)
 
 
-def probe_insert(b: Bloom, urls: jax.Array, mask: jax.Array, *, k: int
-                 ) -> Tuple[jax.Array, Bloom]:
-    """urls/mask: (R, M). Returns (seen (R,M) bool, updated filter).
+def probe_insert_arrays(bits: jax.Array, urls: jax.Array, mask: jax.Array,
+                        *, k: int, bits_log2: int
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Whole-batch probe-then-insert on the raw bits array — the building
+    block the "ref" kernel implementation tiles over (kernels/bloom/ref.py).
 
-    Probe-then-insert: `seen` reflects membership BEFORE this batch."""
-    R, M = urls.shape
-    idx = _bit_indices(urls, k, b.n_bits_log2)            # (R, M, k)
+    Returns (seen (R,M) bool, bits'); `seen` reflects membership BEFORE this
+    batch."""
+    R = urls.shape[0]
+    idx = _bit_indices(urls, k, bits_log2)                # (R, M, k)
     rows = jnp.arange(R)[:, None, None]
-    got = b.bits[rows, idx]                               # (R, M, k)
+    got = bits[rows, idx]                                 # (R, M, k)
     seen = (got == 1).all(axis=-1) & mask
     # insert: scatter-max of (1 * mask) — idempotent under duplicate indices,
     # and masked-out writes contribute 0 (a no-op under max)
     upd = jnp.broadcast_to(mask[..., None], idx.shape).astype(jnp.uint8)
-    bits = b.bits.at[rows, idx].max(upd)
+    return seen, bits.at[rows, idx].max(upd)
+
+
+def probe_insert(b: Bloom, urls: jax.Array, mask: jax.Array, *, k: int,
+                 impl: str = "ref", url_tile: int = 256
+                 ) -> Tuple[jax.Array, Bloom]:
+    """urls/mask: (R, M). Returns (seen (R,M) bool, updated filter).
+
+    ``impl`` picks the implementation via the kernel registry ("ref" |
+    "pallas" | "interpret" | "auto" — kernels/registry.py). All impls share
+    the kernel's streaming contract: URLs are processed in tiles of
+    ``url_tile``, and a tile probes the filter AFTER earlier tiles inserted;
+    within one tile `seen` reflects membership before the tile."""
+    from repro.kernels.bloom.ops import probe_insert as _kernel_probe
+    seen, bits = _kernel_probe(b.bits, urls, mask, k=k, impl=impl,
+                               url_tile=url_tile)
     return seen, Bloom(bits, b.n_bits_log2)
 
 

@@ -50,19 +50,34 @@ def encode_priority(score: jax.Array, arrival_seq: jax.Array,
             - jnp.minimum(arrival_seq, _FIFO_RANGE - 1).astype(jnp.float32))
 
 
-def select(f: Frontier, k: int) -> Tuple[jax.Array, jax.Array, jax.Array, Frontier]:
-    """Pop the top-k URLs of every row (the URL allocator's read).
+def select_arrays(url: jax.Array, priority: jax.Array, valid: jax.Array,
+                  *, k: int) -> Tuple[jax.Array, ...]:
+    """Pure-XLA top-k pop on raw row arrays — the "ref" implementation the
+    kernel registry dispatches to (kernels/frontier_select registers it).
 
-    Returns (urls (R,k), priorities (R,k), mask (R,k), new frontier)."""
-    masked = jnp.where(f.valid, f.priority, NEG)
+    Returns (urls (R,k), priorities (R,k), mask (R,k), priority', valid')."""
+    masked = jnp.where(valid, priority, NEG)
     pri, idx = lax.top_k(masked, k)                      # (R, k)
-    got = jnp.take_along_axis(f.url, idx, axis=1)
+    got = jnp.take_along_axis(url, idx, axis=1)
     mask = pri > NEG * 0.5
     # invalidate selected slots
-    rows = jnp.arange(f.url.shape[0])[:, None]
-    new_valid = f.valid.at[rows, idx].set(
-        jnp.where(mask, False, jnp.take_along_axis(f.valid, idx, axis=1)))
-    new_pri = f.priority.at[rows, idx].set(jnp.where(mask, NEG, pri))
+    rows = jnp.arange(url.shape[0])[:, None]
+    new_valid = valid.at[rows, idx].set(
+        jnp.where(mask, False, jnp.take_along_axis(valid, idx, axis=1)))
+    new_pri = priority.at[rows, idx].set(jnp.where(mask, NEG, pri))
+    return got, pri, mask, new_pri, new_valid
+
+
+def select(f: Frontier, k: int, *, impl: str = "ref"
+           ) -> Tuple[jax.Array, jax.Array, jax.Array, Frontier]:
+    """Pop the top-k URLs of every row (the URL allocator's read).
+
+    ``impl`` picks the implementation via the kernel registry ("ref" |
+    "pallas" | "interpret" | "auto" — kernels/registry.py). Returns
+    (urls (R,k), priorities (R,k), mask (R,k), new frontier)."""
+    from repro.kernels.frontier_select.ops import select as _kernel_select
+    got, pri, mask, new_pri, new_valid = _kernel_select(
+        f.url, f.priority, f.valid, k=k, impl=impl)
     return got, pri, mask, f._replace(valid=new_valid, priority=new_pri)
 
 
@@ -78,13 +93,21 @@ def insert(f: Frontier, urls: jax.Array, scores: jax.Array,
     order = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1          # (R, M)
     pri = encode_priority(scores, f.arrival[:, None] + order, n_buckets)
 
-    # free slots: argsort(valid) puts invalid (False) first — stable
-    free_idx = jnp.argsort(f.valid, axis=1, stable=True)            # (R, C)
-    n_free = (~f.valid).sum(axis=1)                                 # (R,)
+    # free slots: the o-th incoming item goes to the o-th invalid slot (in
+    # column order). Instead of a full (R, C) argsort (XLA lowers sort at
+    # O(C log C) per row), scatter each free slot's column index at its rank
+    # among free slots — ranks are unique per row, so the scatter is
+    # collision-free, and the whole mapping is O(C)
+    free = ~f.valid
+    rank = jnp.cumsum(free.astype(jnp.int32), axis=1) - free        # exclusive
+    n_free = free.sum(axis=1)                                       # (R,)
+    rows = jnp.arange(R)[:, None]
+    iota_c = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (R, C))
+    free_idx = jnp.full((R, C), C, jnp.int32).at[
+        rows, jnp.where(free, rank, C)].min(iota_c, mode="drop")    # (R, C)
     fits = mask & (order < n_free[:, None])
     tgt = jnp.take_along_axis(
         free_idx, jnp.clip(order, 0, C - 1), axis=1)                # (R, M)
-    rows = jnp.arange(R)[:, None]
     # dropped items scatter into a trash column (index C) so they can never
     # collide with a legitimate write — duplicate-index scatter order is
     # undefined in XLA, so collisions must be structurally impossible

@@ -1,0 +1,395 @@
+"""The staged crawl pipeline — WebParF's Phase II step as composable stages.
+
+``crawler.make_crawl_step`` used to be one 340-line closure; it is now a
+pipeline of typed stage functions over a shared ``(CrawlState, StepCarry)``
+pair (DESIGN.md §10):
+
+    allocate -> fetch_analyze -> extract_stage  [-> dispatch_exchange]
+
+Every stage has the same signature::
+
+    stage(ctx: StageContext, state: CrawlState, carry: StepCarry | None)
+        -> (CrawlState, StepCarry, StatsDelta)
+
+where ``StatsDelta`` is a dict of stat-counter increments the composer folds
+into ``state.stats`` after each stage. New scenarios slot in as extra stages
+without touching the core four — ``make_politeness_stage`` (per-domain fetch
+budgets) and ``make_revisit_stage`` (freshness-driven re-enqueue via
+core/freshness.py) are the shipped examples.
+
+All frontier pops and Bloom probes route through the kernel registry
+(kernels/registry.py) via ``ctx.impl`` = ``CrawlConfig.kernel_impl``, so the
+same pipeline runs the pure-XLA reference, the Pallas TPU kernels, or the
+interpreted kernel bodies, selected by config.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import CrawlConfig
+from repro.core import classifier as CLS
+from repro.core import dedup as DD
+from repro.core import freshness as FR
+from repro.core import frontier as F
+from repro.core import partitioner as PT
+from repro.core import router as RT
+from repro.core import webgraph as W
+
+# stats counters (per shard)
+STATS = ("fetched", "fetch_own", "fetch_foreign", "discovered", "dedup_exact",
+         "dedup_bloom", "staging_drop", "frontier_drop", "dispatch_sent",
+         "dispatch_recv", "dispatch_rounds", "revived",
+         "politeness_deferred", "revisit_enqueued")
+NSTAT = len(STATS)
+SIDX = {n: i for i, n in enumerate(STATS)}
+
+StatsDelta = Dict[str, jax.Array]
+
+
+class CrawlState(NamedTuple):
+    # row-sharded (n_slots, ...)
+    f_url: jax.Array
+    f_pri: jax.Array
+    f_valid: jax.Array
+    f_arrival: jax.Array
+    f_dropped: jax.Array
+    f_inserted: jax.Array
+    bloom_bits: jax.Array
+    slot_domain: jax.Array       # (n_slots,) domain living in each slot
+    # shard-sharded (n_shards, ...)
+    staging_url: jax.Array       # (n_shards, S) uint32
+    staging_src: jax.Array       # (n_shards, S) int32 source-page domain
+    staging_n: jax.Array         # (n_shards,) int32
+    stats: jax.Array             # (n_shards, NSTAT) int32
+    # replicated
+    slot_of_domain: jax.Array    # (n_domains,)
+    shard_alive: jax.Array       # (n_shards,) bool
+    step: jax.Array              # () int32
+
+
+class StageContext(NamedTuple):
+    """Static per-build inputs every stage shares (closed over, not traced)."""
+    cfg: CrawlConfig
+    n_shards: int
+    axes: Tuple[str, ...]
+    score_fn: Callable
+    classify_accuracy: float
+    cumw: jax.Array              # static Zipf cumulative weights
+    k_row: int                   # URLs popped per domain row per step
+    S: int                       # staging (dispatch buffer) capacity
+    cap_ex: int                  # per-destination exchange bucket size
+    impl: str                    # kernel impl knob ("ref"|"pallas"|...)
+
+
+class StepCarry(NamedTuple):
+    """Intra-step dataflow between stages (one shard's view)."""
+    shard: jax.Array             # () int32 — this shard's mesh index
+    alive: jax.Array             # () bool
+    urls: jax.Array              # (r, k) URLs popped this step
+    sel: jax.Array               # (r, k) actually-fetched mask
+    true_dom: jax.Array          # (r, k) analyzer's domain (fetch_analyze)
+
+
+class FetchReport(NamedTuple):
+    """Per-step observables the benchmarks consume (host-side analysis)."""
+    fetched_urls: jax.Array      # (n_slots, k_row) uint32  (0 = none)
+    fetched_mask: jax.Array      # (n_slots, k_row) bool
+
+
+Stage = Callable[[StageContext, CrawlState, Optional[StepCarry]],
+                 Tuple[CrawlState, StepCarry, StatsDelta]]
+
+
+# ---------------------------------------------------------------------------
+# state plumbing
+# ---------------------------------------------------------------------------
+
+def frontier_view(s: CrawlState) -> F.Frontier:
+    return F.Frontier(s.f_url, s.f_pri, s.f_valid, s.f_arrival,
+                      s.f_dropped, s.f_inserted)
+
+
+def with_frontier(s: CrawlState, f: F.Frontier) -> CrawlState:
+    return s._replace(f_url=f.url, f_pri=f.priority, f_valid=f.valid,
+                      f_arrival=f.arrival, f_dropped=f.n_dropped,
+                      f_inserted=f.n_inserted)
+
+
+def apply_delta(state: CrawlState, delta: StatsDelta) -> CrawlState:
+    """Fold a stage's stat increments into the shard-local stats row."""
+    stats = state.stats
+    for name, val in delta.items():
+        stats = stats.at[0, SIDX[name]].add(jnp.asarray(val).astype(jnp.int32))
+    return state._replace(stats=stats)
+
+
+def init_state(cfg: CrawlConfig, n_shards: int) -> CrawlState:
+    assert cfg.n_domains % n_shards == 0, (cfg.n_domains, n_shards)
+    assert cfg.n_slots % n_shards == 0
+    f = PT.seed_frontier(cfg, n_shards)
+    dm = PT.identity_map(cfg, n_shards)
+    # register the seeds in the Bloom filters: without this a seed URL
+    # re-discovered via an outlink is re-inserted and crawled TWICE (the one
+    # C1 leak found by benchmarks/overlap.py at classify_accuracy=1.0)
+    bloom = DD.init_bloom(cfg.n_slots, cfg.bloom_bits_log2)
+    _, bloom = DD.probe_insert(bloom, f.url, f.valid, k=cfg.bloom_hashes,
+                               impl=cfg.kernel_impl)
+    S = cfg.dispatch_capacity
+    return CrawlState(
+        f_url=f.url, f_pri=f.priority, f_valid=f.valid, f_arrival=f.arrival,
+        f_dropped=f.n_dropped, f_inserted=f.n_inserted,
+        bloom_bits=bloom.bits,
+        slot_domain=dm.domain_of_slot,
+        staging_url=jnp.zeros((n_shards, S), jnp.uint32),
+        staging_src=jnp.zeros((n_shards, S), jnp.int32),
+        staging_n=jnp.zeros((n_shards,), jnp.int32),
+        stats=jnp.zeros((n_shards, NSTAT), jnp.int32),
+        slot_of_domain=dm.slot_of_domain,
+        shard_alive=dm.shard_alive,
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def state_specs(axes) -> CrawlState:
+    """PartitionSpecs for every leaf (axes = crawler mesh axis name(s))."""
+    row = P(axes)
+    return CrawlState(
+        f_url=row, f_pri=row, f_valid=row, f_arrival=row, f_dropped=row,
+        f_inserted=row, bloom_bits=row, slot_domain=row,
+        staging_url=row, staging_src=row, staging_n=row, stats=row,
+        slot_of_domain=P(), shard_alive=P(), step=P(),
+    )
+
+
+def make_context(cfg: CrawlConfig, *, n_shards: int, axes,
+                 score_fn: Callable, classify_accuracy: float) -> StageContext:
+    axes_t = axes if isinstance(axes, tuple) else (axes,)
+    r_local = cfg.n_slots // n_shards
+    S = cfg.dispatch_capacity
+    return StageContext(
+        cfg=cfg, n_shards=n_shards, axes=axes_t, score_fn=score_fn,
+        classify_accuracy=classify_accuracy, cumw=W.zipf_cumweights(cfg),
+        k_row=max(1, cfg.fetch_batch // r_local), S=S,
+        cap_ex=max(8, -(-S // n_shards) * 2), impl=cfg.kernel_impl)
+
+
+# ---------------------------------------------------------------------------
+# the four core stages
+# ---------------------------------------------------------------------------
+
+def allocate(ctx: StageContext, state: CrawlState,
+             carry: Optional[StepCarry] = None
+             ) -> Tuple[CrawlState, StepCarry, StatsDelta]:
+    """URL allocator: pop the top-k of each local domain queue, then enforce
+    the per-process fetch budget (the downloader has ``fetch_batch`` threads —
+    paper §IV.B.2). Candidates beyond the budget go back to their queues; a
+    dead shard's pops are all given back so no URL is lost between failure
+    and rebalance (C4)."""
+    cfg = ctx.cfg
+    shard = lax.axis_index(ctx.axes).astype(jnp.int32)
+    alive = state.shard_alive[shard]
+    fr = frontier_view(state)
+
+    urls, pri, pre_sel, fr = F.select(fr, ctx.k_row, impl=ctx.impl)
+    r_local = urls.shape[0]
+    if r_local * ctx.k_row > cfg.fetch_batch:
+        flat_pri = jnp.where(pre_sel, pri, F.NEG).reshape(-1)
+        kth = lax.top_k(flat_pri, cfg.fetch_batch)[0][-1]
+        budget = (flat_pri >= kth).reshape(pre_sel.shape)
+        # ties at the threshold could exceed the budget by a few URLs —
+        # acceptable (threads block briefly); give back the rest
+        over = pre_sel & ~budget
+        fr = F.insert(fr, urls, ctx.score_fn(urls, cfg), over,
+                      n_buckets=cfg.n_priority_buckets)
+        pre_sel = pre_sel & budget
+    sel = pre_sel & alive
+    give_back = pre_sel & ~alive
+    fr = F.insert(fr, urls, ctx.score_fn(urls, cfg), give_back,
+                  n_buckets=cfg.n_priority_buckets)
+
+    carry = StepCarry(shard=shard, alive=alive, urls=urls, sel=sel,
+                      true_dom=jnp.zeros(urls.shape, jnp.int32))
+    return with_frontier(state, fr), carry, {"revived": give_back.sum()}
+
+
+def fetch_analyze(ctx: StageContext, state: CrawlState, carry: StepCarry
+                  ) -> Tuple[CrawlState, StepCarry, StatsDelta]:
+    """Document loader (simulated fetch) + page analyzer: recover each fetched
+    page's true topical domain and split own- vs foreign-partition fetches."""
+    cfg = ctx.cfg
+    sel = carry.sel
+    true_dom = CLS.page_domain(carry.urls, cfg)            # (r, k)
+    if cfg.partitioning == "webparf":
+        own = (true_dom == state.slot_domain[:, None]) & sel
+        foreign = sel & ~own
+    else:
+        own, foreign = sel, jnp.zeros_like(sel)
+    delta = {"fetched": sel.sum(), "fetch_own": own.sum(),
+             "fetch_foreign": foreign.sum()}
+    return state, carry._replace(true_dom=true_dom), delta
+
+
+def extract_stage(ctx: StageContext, state: CrawlState, carry: StepCarry
+                  ) -> Tuple[CrawlState, StepCarry, StatsDelta]:
+    """Parser + URL database: extract outlinks, canonicalize (C2), exact-dedup
+    the batch, and append to the staging buffer awaiting the next exchange."""
+    cfg = ctx.cfg
+    S = ctx.S
+    links = W.outlinks(carry.urls, cfg, ctx.cumw)          # (r, k, O)
+    lmask = jnp.broadcast_to(carry.sel[..., None], links.shape)
+    lsrc = jnp.broadcast_to(carry.true_dom[..., None], links.shape)
+    flat_u = links.reshape(-1)
+    flat_m = lmask.reshape(-1)
+    flat_s = lsrc.reshape(-1)
+    discovered = flat_m.sum()
+
+    # dispatcher (local half): canonicalize + exact dedup
+    if cfg.partitioning == "webparf":
+        flat_u = W.canonical(flat_u, cfg)   # content-informed alias fold
+    before = flat_m.sum()
+    flat_m = DD.exact_dedup(flat_u[None], flat_m[None])[0]
+    dedup_exact = before - flat_m.sum()
+
+    # stage into the URL database (batched exchange buffer)
+    n0 = state.staging_n[0]
+    order = jnp.cumsum(flat_m.astype(jnp.int32)) - 1
+    pos = n0 + order
+    fits = flat_m & (pos < S)
+    pos_safe = jnp.where(fits, pos, S)
+    su = jnp.concatenate([state.staging_url[0], jnp.zeros((1,), jnp.uint32)])
+    ss = jnp.concatenate([state.staging_src[0], jnp.zeros((1,), jnp.int32)])
+    su = su.at[pos_safe].set(jnp.where(fits, flat_u, 0))[None, :S]
+    ss = ss.at[pos_safe].set(jnp.where(fits, flat_s, 0))[None, :S]
+    sn = (n0 + fits.sum()).astype(jnp.int32)[None]
+
+    state = state._replace(staging_url=su, staging_src=ss, staging_n=sn)
+    delta = {"discovered": discovered, "dedup_exact": dedup_exact,
+             "staging_drop": (flat_m & ~fits).sum()}
+    return state, carry, delta
+
+
+def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
+                      ) -> Tuple[CrawlState, StepCarry, StatsDelta]:
+    """URL dispatcher (C5): predict each staged URL's owner, all_to_all the
+    per-destination buckets, dedup what arrived (exact + Bloom), and insert
+    the survivors into the local frontier rows."""
+    cfg = ctx.cfg
+    S, n_shards = ctx.S, ctx.n_shards
+    shard = carry.shard
+    su, ss, n = state.staging_url[0], state.staging_src[0], state.staging_n[0]
+    # a dead process sends nothing (its staged URLs are lost — the cost
+    # of failure the paper's rebalancing bounds)
+    valid = (jnp.arange(S) < n) & state.shard_alive[shard]
+
+    # predict destination domain / shard
+    pred = CLS.predict_domain(su, ss, cfg, step=state.step,
+                              accuracy=ctx.classify_accuracy)
+    if cfg.partitioning == "webparf":
+        slot = state.slot_of_domain[jnp.clip(pred, 0, cfg.n_domains - 1)]
+        dest = PT.shard_of_slot(slot, cfg.n_slots, n_shards)
+    elif cfg.partitioning == "url_hash":
+        dest = (W.hash2(su, 61) % jnp.uint32(n_shards)).astype(jnp.int32)
+    else:  # random — unstable destination (changes every dispatch)
+        dest = (W.hash2(su, state.step.astype(jnp.uint32) + 62)
+                % jnp.uint32(n_shards)).astype(jnp.int32)
+
+    payload = jnp.stack([su, pred.astype(jnp.uint32),
+                         valid.astype(jnp.uint32)], axis=-1)  # (S, 3)
+    buckets, bmask, dropped = RT.pack_buckets(payload, dest, n_shards,
+                                              ctx.cap_ex, valid=valid)
+    delta = {"staging_drop": dropped, "dispatch_sent": valid.sum(),
+             "dispatch_rounds": jnp.ones((), jnp.int32)}
+
+    recv = RT.exchange(buckets, ctx.axes)              # (n_shards, cap_ex, 3)
+    r_u = recv[..., 0].reshape(-1)
+    r_pred = recv[..., 1].reshape(-1).astype(jnp.int32)
+    r_m = recv[..., 2].reshape(-1) > 0
+    delta["dispatch_recv"] = r_m.sum()
+
+    # exact dedup across everything received this round
+    before = r_m.sum()
+    r_m = DD.exact_dedup(r_u[None], r_m[None])[0]
+    delta["dedup_exact"] = before - r_m.sum()
+
+    # local row for each received URL
+    r_slots = state.slot_domain.shape[0]               # local row count
+    if cfg.partitioning == "webparf":
+        slot = state.slot_of_domain[jnp.clip(r_pred, 0, cfg.n_domains - 1)]
+        row = slot - shard * r_slots
+        ok = (row >= 0) & (row < r_slots)
+        row = jnp.clip(row, 0, r_slots - 1)
+        r_m = r_m & ok
+    else:
+        row = (W.hash2(r_u, 63) % jnp.uint32(r_slots)).astype(jnp.int32)
+
+    # bucket per local row, Bloom-dedup, insert into the frontier
+    M = min(ctx.cap_ex * n_shards, cfg.frontier_capacity)
+    rb, rbmask, rdrop = RT.pack_buckets(r_u[:, None], row, r_slots, M,
+                                        valid=r_m)
+    rb = rb[..., 0]                                    # (r_slots, M)
+    delta["frontier_drop"] = rdrop
+
+    bloom = DD.Bloom(state.bloom_bits, cfg.bloom_bits_log2)
+    seen, bloom = DD.probe_insert(bloom, rb, rbmask, k=cfg.bloom_hashes,
+                                  impl=ctx.impl)
+    fresh = rbmask & ~seen
+    delta["dedup_bloom"] = (rbmask & seen).sum()
+
+    fr = frontier_view(state)
+    scores = ctx.score_fn(rb, cfg)
+    fr = F.insert(fr, rb, scores, fresh, n_buckets=cfg.n_priority_buckets)
+
+    state = with_frontier(state, fr)._replace(
+        bloom_bits=bloom.bits,
+        staging_url=jnp.zeros_like(state.staging_url),
+        staging_src=jnp.zeros_like(state.staging_src),
+        staging_n=jnp.zeros_like(state.staging_n))
+    return state, carry, delta
+
+
+DEFAULT_PIPELINE: Tuple[Stage, ...] = (allocate, fetch_analyze, extract_stage)
+
+
+# ---------------------------------------------------------------------------
+# scenario stages — insertable without touching the core four
+# ---------------------------------------------------------------------------
+
+def make_politeness_stage(max_per_row: int) -> Stage:
+    """Per-domain politeness budget: cap fetches per domain queue per step at
+    ``max_per_row``; the overflow re-enters the frontier at its original
+    score (a per-host rate limit — insert after ``allocate``)."""
+
+    def politeness(ctx: StageContext, state: CrawlState, carry: StepCarry
+                   ) -> Tuple[CrawlState, StepCarry, StatsDelta]:
+        order = jnp.cumsum(carry.sel.astype(jnp.int32), axis=1) - 1
+        over = carry.sel & (order >= max_per_row)
+        fr = F.insert(frontier_view(state), carry.urls,
+                      ctx.score_fn(carry.urls, ctx.cfg), over,
+                      n_buckets=ctx.cfg.n_priority_buckets)
+        return (with_frontier(state, fr), carry._replace(sel=carry.sel & ~over),
+                {"politeness_deferred": over.sum()})
+
+    return politeness
+
+
+def make_revisit_stage(age_steps: int = 32) -> Stage:
+    """Freshness-driven revisits (core/freshness.py): fetched URLs re-enter
+    their domain queue with an age-discounted score so the allocator
+    interleaves revisits with discovery (insert after ``fetch_analyze``).
+    Revisited URLs bypass the Bloom filter by design — C1's "never crawl
+    twice" applies to discovery, not to deliberate change detection."""
+
+    def revisit(ctx: StageContext, state: CrawlState, carry: StepCarry
+                ) -> Tuple[CrawlState, StepCarry, StatsDelta]:
+        age = jnp.full(carry.urls.shape, age_steps, jnp.int32)
+        fr = FR.reenqueue(frontier_view(state), carry.urls, carry.sel, age,
+                          ctx.cfg)
+        return (with_frontier(state, fr), carry,
+                {"revisit_enqueued": carry.sel.sum()})
+
+    return revisit

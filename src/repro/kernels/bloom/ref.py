@@ -2,20 +2,22 @@
 
 Contract: URLs are processed in TILES of ``url_tile``; each tile probes the
 filter state AFTER all previous tiles inserted (streaming dedup — a later
-tile sees an earlier tile's URLs). core/dedup.probe_insert is the whole-batch
-primitive; this wraps it per tile to mirror the kernel's grid semantics.
+tile sees an earlier tile's URLs). core/dedup.probe_insert_arrays is the
+whole-batch primitive; this tiles it to mirror the kernel's grid semantics.
 """
-from repro.core.dedup import Bloom, probe_insert
 import jax.numpy as jnp
+
+from repro.core.dedup import probe_insert_arrays
 
 
 def bloom_ref(bits, urls, mask, *, k, url_tile=256):
-    b = Bloom(bits, bits.shape[1].bit_length() - 1)
+    bits_log2 = bits.shape[1].bit_length() - 1
     M = urls.shape[1]
     url_tile = min(url_tile, M)
     seen = []
     for t0 in range(0, M, url_tile):
-        s, b = probe_insert(b, urls[:, t0:t0 + url_tile],
-                            mask[:, t0:t0 + url_tile], k=k)
+        s, bits = probe_insert_arrays(
+            bits, urls[:, t0:t0 + url_tile], mask[:, t0:t0 + url_tile],
+            k=k, bits_log2=bits_log2)
         seen.append(s)
-    return jnp.concatenate(seen, axis=1), b.bits
+    return jnp.concatenate(seen, axis=1), bits

@@ -1,4 +1,4 @@
-"""Public jit'd wrapper: GQA-aware attention with implementation dispatch.
+"""Public jit'd wrapper: GQA-aware attention, registry-dispatched.
 
 impl:
   "xla"     — models.layers.chunked_attention (default everywhere the dry-run
@@ -6,6 +6,10 @@ impl:
   "pallas"  — the TPU kernel (compiled Mosaic path; real hardware)
   "interpret" — the kernel body executed in Python on CPU (validation)
   "ref"     — naive oracle (test shapes only)
+
+Dispatch goes through kernels/registry.py — this module only registers the
+per-impl wrappers (which own the GQA head-grouping layout) and exposes the
+jitted entry point.
 """
 from __future__ import annotations
 
@@ -14,8 +18,54 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _gqa_fold(q, k, v):
+    """(B, Hq, S, hd) q rows grouped as (B*Hkv, group) so the kernel's
+    ``h // group`` kv index map lines up."""
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    qg = q.reshape(B, Hkv, group, Sq, hd).reshape(B * Hkv * group, Sq, hd)
+    kf = k.reshape(B * Hkv, Skv, hd)
+    vf = v.reshape(B * Hkv, Skv, hd)
+    return qg, kf, vf, group
+
+
+def _attention_xla(q, k, v, *, causal, block_q, block_k):
+    from repro.models.layers import chunked_attention
+    hd = q.shape[-1]
+    return chunked_attention(q * (hd ** 0.5) / (hd ** 0.5), k, v,
+                             causal=causal, q_chunk=block_q * 8,
+                             kv_chunk=block_k * 8)
+
+
+def _attention_kernel(q, k, v, *, causal, block_q, block_k, interpret):
+    B, Hq, Sq, hd = q.shape
+    Hkv = k.shape[1]
+    qg, kf, vf, group = _gqa_fold(q, k, v)
+    out = flash_attention(qg, kf, vf, causal=causal, block_q=block_q,
+                          block_k=block_k, group=group, interpret=interpret)
+    return out.reshape(B, Hkv, group, Sq, hd).reshape(B, Hq, Sq, hd)
+
+
+def _attention_ref(q, k, v, *, causal, block_q, block_k):
+    B, Hq, Sq, hd = q.shape
+    qg, kf, vf, group = _gqa_fold(q, k, v)
+    out = attention_ref(qg, kf, vf, causal=causal, group=group)
+    return out.reshape(B, Hq, Sq, hd)
+
+
+registry.register("flash_attention", "xla", _attention_xla, cpu_default=True)
+registry.register("flash_attention", "pallas",
+                  partial(_attention_kernel, interpret=False),
+                  tpu_default=True)
+registry.register("flash_attention", "interpret",
+                  partial(_attention_kernel, interpret=True))
+registry.register("flash_attention", "ref", _attention_ref)
 
 
 @partial(jax.jit, static_argnames=("causal", "impl", "block_q", "block_k"))
@@ -23,29 +73,5 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
               causal: bool = True, impl: str = "xla",
               block_q: int = 128, block_k: int = 128) -> jax.Array:
     """q: (B, Hq, S, hd); k/v: (B, Hkv, S, hd). Returns (B, Hq, S, hd)."""
-    B, Hq, Sq, hd = q.shape
-    Hkv, Skv = k.shape[1], k.shape[2]
-    group = Hq // Hkv
-
-    if impl == "xla":
-        from repro.models.layers import chunked_attention
-        return chunked_attention(q * (hd ** 0.5) / (hd ** 0.5), k, v,
-                                 causal=causal, q_chunk=block_q * 8,
-                                 kv_chunk=block_k * 8)
-
-    qf = q.reshape(B * Hq, Sq, hd)
-    kf = k.reshape(B * Hkv, Skv, hd)
-    vf = v.reshape(B * Hkv, Skv, hd)
-    if impl in ("pallas", "interpret"):
-        # GQA layout: q rows must be grouped as (B*Hkv, group) so the kernel's
-        # `h // group` kv index map lines up
-        qg = q.reshape(B, Hkv, group, Sq, hd).reshape(B * Hkv * group, Sq, hd)
-        out = flash_attention(qg, kf, vf, causal=causal, block_q=block_q,
-                              block_k=block_k, group=group,
-                              interpret=(impl == "interpret"))
-        return out.reshape(B, Hkv, group, Sq, hd).reshape(B, Hq, Sq, hd)
-    if impl == "ref":
-        qg = q.reshape(B, Hkv, group, Sq, hd).reshape(B * Hkv * group, Sq, hd)
-        out = attention_ref(qg, kf, vf, causal=causal, group=group)
-        return out.reshape(B, Hq, Sq, hd)
-    raise ValueError(impl)
+    return registry.dispatch("flash_attention", impl, q, k, v, causal=causal,
+                             block_q=block_q, block_k=block_k)

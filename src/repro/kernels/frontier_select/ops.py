@@ -1,15 +1,25 @@
-"""Jit'd wrapper with impl dispatch for the frontier select kernel."""
+"""Public jit'd wrapper for the frontier select kernel.
+
+Dispatch goes through kernels/registry.py — this module only registers the
+implementations and exposes the jitted entry point.
+"""
 from functools import partial
 
 import jax
 
+from repro.kernels import registry
 from repro.kernels.frontier_select.frontier_select import frontier_select
 from repro.kernels.frontier_select.ref import select_ref
+
+registry.register("frontier_select", "ref", select_ref, cpu_default=True)
+registry.register("frontier_select", "pallas",
+                  partial(frontier_select, interpret=False), tpu_default=True)
+registry.register("frontier_select", "interpret",
+                  partial(frontier_select, interpret=True))
 
 
 @partial(jax.jit, static_argnames=("k", "impl"))
 def select(url, pri, valid, *, k: int, impl: str = "ref"):
-    if impl == "ref":
-        return select_ref(url, pri, valid, k=k)
-    return frontier_select(url, pri, valid, k=k,
-                           interpret=(impl == "interpret"))
+    """url/pri/valid: (R, C). Returns (sel_url, sel_pri, sel_mask (R,k),
+    pri', valid')."""
+    return registry.dispatch("frontier_select", impl, url, pri, valid, k=k)

@@ -1,12 +1,6 @@
-"""Oracle: core/frontier.select IS the reference for the select kernel."""
-from repro.core.frontier import Frontier, select
-import jax.numpy as jnp
+"""Oracle: core/frontier's pure-XLA pop IS the reference for the kernel."""
+from repro.core.frontier import select_arrays
 
 
 def select_ref(url, pri, valid, *, k: int):
-    f = Frontier(url, pri, valid,
-                 jnp.zeros((url.shape[0],), jnp.int32),
-                 jnp.zeros((url.shape[0],), jnp.int32),
-                 jnp.zeros((url.shape[0],), jnp.int32))
-    got, p, mask, f2 = select(f, k)
-    return got, p, mask, f2.priority, f2.valid
+    return select_arrays(url, pri, valid, k=k)

@@ -1,0 +1,112 @@
+"""Single dispatch point for every kernel in the repo.
+
+Each kernel family's ``ops.py`` registers its implementations here instead of
+carrying its own copy-pasted ``if impl == ...`` chain; the crawl step, the
+models, the dry-run and the benchmarks all resolve through this one table, so
+"which implementation runs" is a config knob (``CrawlConfig.kernel_impl``)
+rather than a per-call-site accident.
+
+Implementation names:
+  "ref"       — pure-XLA oracle (compiles on any backend; the semantics spec)
+  "pallas"    — the compiled Mosaic TPU kernel (real hardware)
+  "interpret" — the Pallas kernel body run by the interpreter (CPU validation
+                of the exact kernel semantics)
+  "auto"      — resolve at call time: the kernel's registered TPU default on
+                TPU backends, its CPU default elsewhere
+plus any kernel-specific extras (flash_attention registers "xla", its
+production CPU/dry-run path).
+
+Registration is declarative::
+
+    registry.register("bloom", "ref", bloom_ref, cpu_default=True)
+    registry.register("bloom", "pallas", kernel_fn, tpu_default=True)
+
+and dispatch is one call::
+
+    registry.dispatch("bloom", impl, bits, urls, mask, k=4)
+
+``impl`` must be static under jit (it selects which program to trace).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, Tuple
+
+import jax
+
+IMPLS = ("ref", "pallas", "interpret", "auto")
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+_CPU_DEFAULT: Dict[str, str] = {}
+_TPU_DEFAULT: Dict[str, str] = {}
+
+
+def _ensure(kernel: str) -> None:
+    """Registration happens when a family's ops.py imports; callers that hit
+    the registry before touching the ops module (CLIs, benchmarks) trigger
+    that import here by naming convention: repro.kernels.<kernel>.ops."""
+    if kernel in _REGISTRY:
+        return
+    mod = f"repro.kernels.{kernel}.ops"
+    try:
+        importlib.import_module(mod)
+    except ModuleNotFoundError as e:
+        # only a genuinely absent module means "no such kernel" — a broken
+        # import inside an existing ops.py must surface, not be rewritten
+        # into a misleading unknown-kernel KeyError
+        if e.name not in (mod, f"repro.kernels.{kernel}"):
+            raise
+
+
+def register(kernel: str, impl: str, fn: Callable, *,
+             cpu_default: bool = False, tpu_default: bool = False) -> Callable:
+    """Register ``fn`` as the ``impl`` implementation of ``kernel``.
+
+    ``cpu_default`` / ``tpu_default`` mark what ``impl="auto"`` resolves to on
+    each backend family. Returns ``fn`` so it can be used as a decorator via
+    ``functools.partial``.
+    """
+    impls = _REGISTRY.setdefault(kernel, {})
+    if impl in impls and impls[impl] is not fn:
+        raise ValueError(f"kernel {kernel!r} impl {impl!r} registered twice")
+    impls[impl] = fn
+    if cpu_default:
+        _CPU_DEFAULT[kernel] = impl
+    if tpu_default:
+        _TPU_DEFAULT[kernel] = impl
+    return fn
+
+
+def kernels() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def available(kernel: str) -> Tuple[str, ...]:
+    _ensure(kernel)
+    if kernel not in _REGISTRY:
+        raise KeyError(f"unknown kernel {kernel!r}; registered: {kernels()}")
+    return tuple(sorted(_REGISTRY[kernel]))
+
+
+def resolve_impl(kernel: str, impl: str = "auto") -> str:
+    """Normalize ``impl`` ("auto" -> the backend's default for this kernel)."""
+    _ensure(kernel)
+    if kernel not in _REGISTRY:
+        raise KeyError(f"unknown kernel {kernel!r}; registered: {kernels()}")
+    if impl == "auto":
+        if jax.default_backend() == "tpu":
+            impl = _TPU_DEFAULT.get(kernel, "pallas")
+        else:
+            impl = _CPU_DEFAULT.get(kernel, "ref")
+    if impl not in _REGISTRY[kernel]:
+        raise ValueError(f"kernel {kernel!r} has no impl {impl!r}; "
+                         f"available: {available(kernel)}")
+    return impl
+
+
+def resolve(kernel: str, impl: str = "auto") -> Callable:
+    return _REGISTRY[kernel][resolve_impl(kernel, impl)]
+
+
+def dispatch(kernel: str, impl: str, *args, **kwargs):
+    return resolve(kernel, impl)(*args, **kwargs)

@@ -32,6 +32,10 @@ def main(argv=None):
     ap.add_argument("--dispatch-interval", type=int, default=4)
     ap.add_argument("--partitioning", default="webparf",
                     choices=["webparf", "url_hash", "random"])
+    ap.add_argument("--kernel-impl", default="auto",
+                    choices=["auto", "ref", "pallas", "interpret"],
+                    help="frontier-select/bloom implementation "
+                         "(kernels/registry.py; auto = Pallas on TPU)")
     ap.add_argument("--classify-accuracy", type=float, default=0.9)
     ap.add_argument("--fail-shard", type=int, default=-1)
     ap.add_argument("--fail-at", type=int, default=-1)
@@ -42,13 +46,16 @@ def main(argv=None):
                  frontier_capacity=args.capacity, fetch_batch=args.fetch_batch,
                  dispatch_interval=args.dispatch_interval,
                  bloom_bits_log2=16, dispatch_capacity=1024,
-                 url_space_log2=24, partitioning=args.partitioning)
+                 url_space_log2=24, partitioning=args.partitioning,
+                 kernel_impl=args.kernel_impl)
     mesh = make_host_mesh()
     n_shards = mesh.shape["data"]
     init, step_f, step_d = CR.make_spmd_crawler(
         cfg, mesh, axes=("data",), classify_accuracy=args.classify_accuracy)
     state = init()
-    print(f"{args.partitioning}: {args.domains} domains over {n_shards} shards")
+    from repro.kernels import registry
+    print(f"{args.partitioning}: {args.domains} domains over {n_shards} shards"
+          f" (kernels: {registry.resolve_impl('frontier_select', cfg.kernel_impl)})")
 
     fetched_all = []
     t0 = time.time()

@@ -15,6 +15,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 # TPU v5e per-chip roofline constants
 PEAK_FLOPS_BF16 = 197e12        # FLOP/s
 HBM_BW = 819e9                  # B/s
@@ -28,15 +30,11 @@ def make_production_mesh(*, multi_pod: bool = False,
     in-pod grid for mesh-geometry ablations (e.g. 32x8 — §Perf)."""
     shape = (2, dp, tp) if multi_pod else (dp, tp)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
     """Whatever this host actually has — used by examples/tests."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    return make_mesh((n // model, model), ("data", "model"))

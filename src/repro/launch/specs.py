@@ -366,9 +366,17 @@ def _recsys_cell(arch: str, cfg: RecSysConfig, shape: ShapeSpec,
 # ---------------------------------------------------------------------------
 
 def _crawl_cell(arch: str, cfg: CrawlConfig, shape: ShapeSpec,
-                mesh: Mesh) -> Cell:
+                mesh: Mesh, variant: str = "baseline") -> Cell:
+    from repro.compat import shard_map
     from repro.core import crawler as CR
 
+    if variant == "opt":
+        # the optimized cell lowers the Pallas frontier/bloom kernels ("auto"
+        # resolves per backend); baseline pins the pure-XLA reference so the
+        # two HLOs are comparable on any host
+        cfg = dataclasses.replace(cfg, kernel_impl="auto")
+    elif cfg.kernel_impl == "auto":
+        cfg = dataclasses.replace(cfg, kernel_impl="ref")
     axes = _dp(mesh)
     n_shards = _dp_size(mesh)
     local = CR.make_crawl_step(cfg, n_shards=n_shards, axes=axes)
@@ -376,16 +384,17 @@ def _crawl_cell(arch: str, cfg: CrawlConfig, shape: ShapeSpec,
     rep_specs = CR.FetchReport(P(axes), P(axes))
 
     def fn(state):
-        return jax.shard_map(partial(local, dispatch=True), mesh=mesh,
-                             in_specs=(specs,), out_specs=(specs, rep_specs),
-                             check_vma=False)(state)
+        return shard_map(partial(local, dispatch=True), mesh=mesh,
+                         in_specs=(specs,),
+                         out_specs=(specs, rep_specs))(state)
 
     state_shape = jax.eval_shape(lambda: CR.init_state(cfg, n_shards))
     state_sh = jax.tree.map(
         lambda s: NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P))
     return Cell(arch, shape.name, fn, (state_shape,), (state_sh,), None,
-                dict(family="crawl"))
+                dict(family="crawl", kernel_impl=cfg.kernel_impl,
+                     variant=variant))
 
 
 # ---------------------------------------------------------------------------
@@ -403,5 +412,5 @@ def build_cell(arch: str, shape_name: str, mesh: Mesh,
     if getattr(cfg, "family", None) == "recsys":
         return _recsys_cell(arch, cfg, shape, mesh, variant)
     if getattr(cfg, "family", None) == "crawl":
-        return _crawl_cell(arch, cfg, shape, mesh)
+        return _crawl_cell(arch, cfg, shape, mesh, variant)
     raise ValueError(f"unknown family for {arch}")

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.compat import opt_barrier, shard_map
 from repro.configs.base import RecSysConfig
 
 Params = Dict[str, Any]
@@ -81,10 +82,10 @@ def sharded_lookup(table: jax.Array, ids: jax.Array, *, mesh, model_axis: str,
         got = jnp.where(ok[..., None], got, 0)
         return lax.psum(got, model_axis)
 
-    return jax.shard_map(
+    return shard_map(
         local, mesh=mesh,
         in_specs=(P(model_axis, None), P(data_axes)),
-        out_specs=P(data_axes), check_vma=False)(table, ids)
+        out_specs=P(data_axes))(table, ids)
 
 
 def mlp(params, x, *, final_act=None):
@@ -124,7 +125,7 @@ def chunked_topk_scores(query: jax.Array, table: jax.Array, *, k: int = 100,
     def step(carry, xs):
         best_s, best_i = carry
         block, j = xs
-        block = lax.optimization_barrier(block)   # keep per-chunk (no hoist)
+        block = opt_barrier(block)   # keep per-chunk (no hoist)
         # replicate the 4 MB table block (NOT the 1 GiB score block): scores
         # inherit the table's model sharding otherwise, and the top-k concat
         # then all-gathers (B, chunk) every scan step

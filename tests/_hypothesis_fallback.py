@@ -1,0 +1,111 @@
+"""Minimal hypothesis stand-in so property tests stay collectible (and keep
+running, deterministically) when hypothesis isn't installed.
+
+Usage in test modules::
+
+    from _hypothesis_fallback import given, settings, st
+
+When the real hypothesis is importable it is re-exported untouched. The
+fallback implements just the strategy surface this repo uses — integers,
+floats, tuples, lists(unique=...) — and runs each property over a fixed
+number of seeded-random examples (seeded per test name, so failures
+reproduce), always starting from each strategy's minimal example. No
+shrinking, no database: a fallback, not a replacement.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import random
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, sample, min_sample=None):
+            self.sample = sample                 # sample(rng) -> value
+            self.min_sample = min_sample or sample
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                             lambda rng: min_value)
+
+        @staticmethod
+        def floats(min_value, max_value, width=64):
+            def sample(rng):
+                x = min_value + (max_value - min_value) * rng.random()
+                if width == 32:
+                    x = float(np.float32(x))
+                return min(max(x, min_value), max_value)
+            return _Strategy(sample, lambda rng: min_value)
+
+        @staticmethod
+        def tuples(*strategies):
+            return _Strategy(
+                lambda rng: tuple(s.sample(rng) for s in strategies),
+                lambda rng: tuple(s.min_sample(rng) for s in strategies))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, unique=False):
+            def draw(rng, n):
+                out, seen, attempts = [], set(), 0
+                while len(out) < n and attempts < 50 * (n + 1):
+                    v = elements.sample(rng)
+                    attempts += 1
+                    if unique:
+                        if v in seen:
+                            continue
+                        seen.add(v)
+                    out.append(v)
+                return out
+            return _Strategy(
+                lambda rng: draw(rng, rng.randint(min_size, max_size)),
+                lambda rng: draw(rng, min_size))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.getrandbits(1)),
+                             lambda rng: False)
+
+    st = _St()
+
+    class settings:  # noqa: N801 — mirrors hypothesis' decorator name
+        def __init__(self, max_examples=100, deadline=None, **_):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._fallback_max_examples = self.max_examples
+            return fn
+
+    def given(*strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                # read at call time: @settings may wrap @given or vice versa
+                n = getattr(runner, "_fallback_max_examples", 20)
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                for i in range(n):
+                    # the first example pins every strategy at its minimum so
+                    # the empty/degenerate case is always exercised
+                    ex = tuple((s.min_sample if i == 0 else s.sample)(rng)
+                               for s in strategies)
+                    try:
+                        fn(*args, *ex, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (fallback): {ex!r}") from e
+
+            # pytest must not mistake the strategy-filled params for fixtures
+            # (functools.wraps leaves __wrapped__, which signature() follows)
+            del runner.__wrapped__
+            runner.__signature__ = inspect.Signature()
+            return runner
+        return deco

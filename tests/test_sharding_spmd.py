@@ -15,6 +15,7 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
 
+    from repro.compat import make_mesh
     from repro.configs import get_reduced
     from repro.configs.base import scaled
     from repro.sharding import rules
@@ -22,8 +23,7 @@ SCRIPT = textwrap.dedent("""
     from repro.optim import adamw
     from repro.train.trainer import init_train_state, make_train_step
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
 
     # ---- sharded LM train step == single-device train step --------------
     cfg = scaled(get_reduced("deepseek-moe-16b"), dtype="float32")
@@ -66,8 +66,7 @@ SCRIPT = textwrap.dedent("""
     # ---- crawler on a (pod, data) mesh: multi-axis all_to_all ------------
     from repro.configs import get_reduced as gr
     from repro.core import crawler as CR
-    cmesh = jax.make_mesh((2, 4), ("pod", "data"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cmesh = make_mesh((2, 4), ("pod", "data"))
     ccfg = gr("webparf")
     init, step_f, step_d = CR.make_spmd_crawler(ccfg, cmesh, axes=("pod", "data"))
     st = init()
@@ -87,8 +86,7 @@ SCRIPT = textwrap.dedent("""
     from repro.train import checkpoint as CK
     with tempfile.TemporaryDirectory() as d:
         CK.save(d, 0, out_state)
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh2 = make_mesh((2, 4), ("data", "model"))
         pspec2 = rules.lm_specs(jax.eval_shape(lambda: params), mesh2)
         ospec2 = rules.opt_state_specs(state.opt_state, pspec2, mesh2)
         sspec2 = TrainState(pspec2, ospec2, NamedSharding(mesh2, P()))
