@@ -1,51 +1,28 @@
-"""Shared crawl-benchmark driver."""
+"""Shared crawl-benchmark driver — thin wrappers over ``repro.api``.
+
+The loop itself lives in ``repro.api.CrawlSession`` now; this module keeps
+the historical ``(urls, state, per_step, wall)`` tuple shape the benchmark
+suites consume, and re-exports the metric helpers from their new home in
+``repro.api.report``.
+"""
 from __future__ import annotations
-
-import time
-
-import numpy as np
 
 
 def run_crawl(cfg, steps, *, classify_accuracy=0.9, mesh=None,
-              events=None):
+              events=None, mode="auto"):
     """Drive a crawl for `steps`; returns (fetched urls, state, per-step
     fetch counts, wall seconds). `events` maps step -> callable(state)."""
-    import jax
-    from repro.core import crawler as CR
-    from repro.launch.mesh import make_host_mesh
-
-    mesh = mesh or make_host_mesh()
-    init, step_f, step_d = CR.make_spmd_crawler(
-        cfg, mesh, classify_accuracy=classify_accuracy)
-    state = init()
-    fetched, per_step = [], []
-    t0 = time.time()
-    for t in range(steps):
-        if events and t in events:
-            state = events[t](state)
-        fn = step_d if (t + 1) % cfg.dispatch_interval == 0 else step_f
-        state, rep = fn(state)
-        m = np.asarray(rep.fetched_mask)
-        per_step.append(int(m.sum()))
-        fetched.append(np.asarray(rep.fetched_urls)[m])
-    urls = np.concatenate(fetched) if fetched else np.array([], np.uint32)
-    return urls, state, np.asarray(per_step), time.time() - t0
+    from repro.api import CrawlSession
+    sess = CrawlSession(cfg, mesh, classify_accuracy=classify_accuracy)
+    rep = sess.run(steps, events=events, mode=mode)
+    return rep.urls, sess.state, rep.per_step, rep.seconds
 
 
 def stats_dict(state):
-    from repro.core import crawler as CR
-    s = np.asarray(state.stats).sum(0)
-    return {n: int(v) for n, v in zip(CR.STATS, s)}
+    from repro.api import stats_dict as _stats_dict
+    return _stats_dict(state)
 
 
 def overlap_metrics(urls, cfg):
-    import jax.numpy as jnp
-    from repro.core import webgraph as W
-    if len(urls) == 0:
-        return dict(url_dup=0.0, content_dup=0.0, fetched=0)
-    canon = np.asarray(W.canonical(jnp.asarray(urls.astype(np.uint32)), cfg))
-    return dict(
-        fetched=len(urls),
-        url_dup=1.0 - len(np.unique(urls)) / len(urls),
-        content_dup=1.0 - len(np.unique(canon)) / len(canon),
-    )
+    from repro.api import overlap_metrics as _overlap_metrics
+    return _overlap_metrics(urls, cfg)

@@ -106,7 +106,10 @@ def bench_crawl_step(steps=16):
               f" pages/s, {len(urls)} fetched)")
 
 
-def main():
+def main(smoke: bool = False):
+    """``smoke=True`` shrinks shapes/steps to CI size (~tens of seconds on
+    CPU — the interpret path unrolls the Pallas grid, so big shapes are
+    trace-bound); numbers are then only a liveness check, not a benchmark."""
     import jax
     from repro.kernels import registry
     # importing ops modules registers every implementation
@@ -118,10 +121,19 @@ def main():
     for kern in registry.kernels():
         print(f"  {kern}: impls={registry.available(kern)} "
               f"auto->{registry.resolve_impl(kern, 'auto')}")
-    bench_frontier_select()
-    bench_bloom()
-    bench_crawl_step()
+    if smoke:
+        bench_frontier_select(R=16, C=256, k=8)
+        bench_bloom(R=16, M=128, bits_log2=12)
+        bench_crawl_step(steps=4)
+    else:
+        bench_frontier_select()
+        bench_bloom()
+        bench_crawl_step()
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized shapes/steps (liveness, not timing)")
+    main(smoke=ap.parse_args().smoke)

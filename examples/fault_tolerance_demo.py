@@ -1,5 +1,7 @@
-"""C4 demo: kill a crawl process mid-run, rebalance its domains, keep going;
-then checkpoint/restart the whole crawl state bit-exactly.
+"""C4 demo on the session API: kill a crawl process mid-run
+(``session.inject_failure``), rebalance its domains (``session.heal``), keep
+going; then checkpoint/restore the whole crawl state bit-exactly
+(``session.checkpoint``/``session.restore``).
 
     PYTHONPATH=src python examples/fault_tolerance_demo.py
 (needs >=2 host devices: run with
@@ -14,53 +16,38 @@ import tempfile
 import numpy as np
 import jax
 
+from repro.api import CrawlSession
 from repro.configs import get_reduced
-from repro.core import crawler as CR
-from repro.launch.mesh import make_host_mesh
-from repro.train import checkpoint as ckpt
-from repro.train.fault import heal_crawler
-
-
-def run(state, fns, steps, t0, interval):
-    step_f, step_d = fns
-    per = []
-    for t in range(t0, t0 + steps):
-        state, rep = (step_d if (t + 1) % interval == 0 else step_f)(state)
-        per.append(int(np.asarray(rep.fetched_mask).sum()))
-    return state, np.mean(per)
 
 
 def main():
     cfg = get_reduced("webparf")
-    mesh = make_host_mesh()
-    n = mesh.shape["data"]
-    init, step_f, step_d = CR.make_spmd_crawler(cfg, mesh)
-    state = init()
-    fns = (step_f, step_d)
-    iv = cfg.dispatch_interval
+    sess = CrawlSession(cfg)
 
-    state, r0 = run(state, fns, 12, 0, iv)
-    print(f"healthy:            {r0:.1f} pages/step on {n} shards")
+    r0 = sess.run(12)
+    print(f"healthy:            {r0.per_step.mean():.1f} pages/step "
+          f"on {sess.n_shards} shards")
 
-    state = CR.mark_dead(state, [1])
-    state, r1 = run(state, fns, 12, 12, iv)
-    print(f"shard 1 dead:       {r1:.1f} pages/step (degraded)")
+    sess.inject_failure(1)
+    r1 = sess.run(12)
+    print(f"shard 1 dead:       {r1.per_step.mean():.1f} pages/step (degraded)")
 
-    state = heal_crawler(state, cfg, [1], n)
-    state, r2 = run(state, fns, 12, 24, iv)
-    print(f"after rebalance:    {r2:.1f} pages/step "
+    sess.heal()
+    r2 = sess.run(12)
+    print(f"after rebalance:    {r2.per_step.mean():.1f} pages/step "
           f"(dead shard's domains migrated to survivors)")
 
-    # checkpoint/restart the FULL crawl state
+    # checkpoint/restart the FULL crawl state through the session
     with tempfile.TemporaryDirectory() as d:
-        ckpt.save(d, 36, state)
-        restored = ckpt.restore(d, state)
+        sess.checkpoint(d)
+        twin = CrawlSession(cfg, sess.mesh).restore(d)
         same = all(bool((np.asarray(a) == np.asarray(b)).all())
-                   for a, b in zip(jax.tree.leaves(state),
-                                   jax.tree.leaves(restored)))
-        print(f"checkpoint/restore bit-exact: {same}")
-        state, r3 = run(restored, fns, 8, 36, iv)
-        print(f"resumed crawl:      {r3:.1f} pages/step")
+                   for a, b in zip(jax.tree.leaves(sess.state),
+                                   jax.tree.leaves(twin.state)))
+        print(f"checkpoint/restore bit-exact: {same} "
+              f"(resumed at step {twin.t})")
+        r3 = twin.run(8)
+        print(f"resumed crawl:      {r3.per_step.mean():.1f} pages/step")
 
 
 if __name__ == "__main__":

@@ -1,7 +1,9 @@
 """Learned URL ranker (DESIGN.md §6): train a small MLP on crawl telemetry
-(url features -> popularity), then plug it into the crawler as `score_fn` —
-the paper's "URL ranker" upgraded from hand-crafted metrics to a model, and
-the concrete recsys-family integration point.
+(url features -> popularity), then plug it into the crawler as the session's
+`score_fn` — the paper's "URL ranker" upgraded from hand-crafted metrics to
+a model, and the concrete recsys-family integration point. Both crawls run
+through ``repro.api.CrawlSession`` (custom score functions thread straight
+into the fused scan core).
 
     PYTHONPATH=src python examples/learned_ranker.py
 """
@@ -12,8 +14,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import CrawlSession
 from repro.configs import get_reduced
-from repro.core import crawler as CR
 from repro.core.ranker import make_learned_scorer, url_features
 from repro.data.pipeline import ranker_examples
 from repro.launch.mesh import make_host_mesh
@@ -24,15 +26,8 @@ from repro.train.trainer import init_train_state, make_train_step
 
 def crawl(cfg, steps, mesh, score_fn=None):
     kw = {"score_fn": score_fn} if score_fn else {}
-    init, sf, sd = CR.make_spmd_crawler(cfg, mesh, **kw)
-    st = init()
-    urls, pop = [], []
-    for t in range(steps):
-        st, rep = (sd if (t + 1) % cfg.dispatch_interval == 0 else sf)(st)
-        m = np.asarray(rep.fetched_mask)
-        urls.append(np.asarray(rep.fetched_urls)[m])
+    u = CrawlSession(cfg, mesh, **kw).run(steps).urls
     from repro.core.webgraph import popularity
-    u = np.concatenate(urls)
     return u, float(np.asarray(popularity(jnp.asarray(u.astype(np.uint32)), cfg)).mean())
 
 

@@ -1,8 +1,10 @@
 """Quickstart: the WebParF system end to end in ~a minute on CPU.
 
-1. Build the partitioned Global URL Frontier (Phase I).
+1. Build the partitioned Global URL Frontier (Phase I) — done by
+   ``CrawlSession``, the one driver API (repro.api).
 2. Run the parallel crawl simulation (Phase II) — select/fetch/parse/
-   classify/dedup/batched-dispatch.
+   classify/dedup/batched-dispatch; each dispatch interval is fused into a
+   single jitted scan by ``session.run``.
 3. Train a small LM on the crawled corpus (the collection the paper's
    crawler exists to produce).
 
@@ -15,12 +17,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.api import CrawlSession
 from repro.configs import get_reduced
 from repro.configs.base import scaled
-from repro.core import crawler as CR
-from repro.core import webgraph as W
 from repro.data.pipeline import lm_batches
-from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
 from repro.optim import adamw
 from repro.train.trainer import init_train_state, make_train_step
@@ -29,25 +29,16 @@ from repro.train.trainer import init_train_state, make_train_step
 def main():
     # --- crawl ------------------------------------------------------------
     cfg = get_reduced("webparf")
-    mesh = make_host_mesh()
-    init, step_fetch, step_dispatch = CR.make_spmd_crawler(cfg, mesh)
-    state = init()
+    sess = CrawlSession(cfg)
     print(f"Phase I: {cfg.n_domains} domain pools seeded, "
-          f"{int(state.f_valid.sum())} hub URLs in the Global Frontier")
+          f"{int(sess.state.f_valid.sum())} hub URLs in the Global Frontier")
 
-    fetched = []
-    for t in range(40):
-        fn = step_dispatch if (t + 1) % cfg.dispatch_interval == 0 else step_fetch
-        state, rep = fn(state)
-        m = np.asarray(rep.fetched_mask)
-        fetched.append(np.asarray(rep.fetched_urls)[m])
-    urls = np.concatenate(fetched)
-    stats = {n: int(v) for n, v in
-             zip(CR.STATS, np.asarray(state.stats).sum(0))}
+    report = sess.run(40)
+    urls, stats = report.urls, report.stats
     print(f"Phase II: crawled {len(urls)} pages "
           f"({len(np.unique(urls))} unique — C1), "
           f"{stats['dispatch_rounds']} batched exchanges (C5), "
-          f"{stats['dedup_bloom']} bloom dedups")
+          f"{stats['dedup_bloom']} bloom dedups — {report.summary()}")
 
     # --- train on the crawl -------------------------------------------------
     lm_cfg = scaled(get_reduced("qwen2-1.5b"), dtype="float32")

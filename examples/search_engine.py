@@ -1,5 +1,9 @@
 """The full cascade of the paper's Figure 1: CRAWL -> INDEX -> SEARCH.
 
+The crawl runs on ``repro.api.CrawlSession``; each 8-step ``run`` segment
+(two fused dispatch intervals) yields a typed CrawlReport whose URL batch
+feeds one batched index update.
+
     PYTHONPATH=src python examples/search_engine.py
 """
 import os, sys
@@ -8,34 +12,24 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 import jax.numpy as jnp
 
+from repro.api import CrawlSession
 from repro.configs import get_reduced
-from repro.core import crawler as CR
 from repro.core import index as IX
 from repro.core import webgraph as W
-from repro.launch.mesh import make_host_mesh
 
 VOCAB, DOC_LEN = 4096, 64
 
 
 def main():
     cfg = get_reduced("webparf")
-    mesh = make_host_mesh()
-    init, step_f, step_d = CR.make_spmd_crawler(cfg, mesh)
-    state = init()
+    sess = CrawlSession(cfg)
 
     # crawl + batched index updates (paper §IV.B.4: "index updated in batches")
     idx = IX.init_index(4096, DOC_LEN, VOCAB)
-    staged = []
-    for t in range(48):
-        fn = step_d if (t + 1) % cfg.dispatch_interval == 0 else step_f
-        state, rep = fn(state)
-        m = np.asarray(rep.fetched_mask)
-        staged.append(np.asarray(rep.fetched_urls)[m])
-        if (t + 1) % 8 == 0:                      # batch the index build
-            batch = np.concatenate(staged)
-            idx = IX.add_batch(idx, jnp.asarray(batch.astype(np.uint32)),
-                               jnp.ones(len(batch), bool), cfg)
-            staged = []
+    for _ in range(48 // 8):                      # one index build per segment
+        batch = sess.run(8).urls
+        idx = IX.add_batch(idx, jnp.asarray(batch.astype(np.uint32)),
+                           jnp.ones(len(batch), bool), cfg)
     print(f"indexed {int(idx.n_docs)} crawled pages (batched updates)")
 
     # search: one query per domain — results should come from that domain

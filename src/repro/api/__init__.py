@@ -1,0 +1,23 @@
+"""repro.api — the driver-facing surface of the WebParF reproduction.
+
+API layering (DESIGN.md §11):
+
+  kernels/registry.py        which implementation serves each hot kernel
+  core/partitioner.py        which partitioning policy serves the stages
+  core/crawler.py            the stable KERNEL-FACING layer: make_crawl_step /
+                             make_spmd_crawler + the re-exported state types
+                             (CrawlState, FetchReport, STATS, ...)
+  repro.api (this package)   the stable DRIVER-FACING layer: CrawlSession
+                             owns mesh/state/step-counter and the eager vs
+                             fused-scan execution choice; CrawlReport is the
+                             typed result every consumer reads.
+
+Examples, launch/crawl.py, and the benchmarks all sit on this package; only
+tests and the dry-run reach below it.
+"""
+from repro.api.report import (CrawlReport, harvest, overlap_metrics,
+                              stats_dict)
+from repro.api.session import CrawlSession
+
+__all__ = ["CrawlSession", "CrawlReport", "harvest", "overlap_metrics",
+           "stats_dict"]

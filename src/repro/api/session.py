@@ -1,0 +1,233 @@
+"""CrawlSession — the one driver API over the SPMD crawler.
+
+Every entry point used to re-wire the same Phase II loop by hand: build a
+mesh, call ``make_spmd_crawler``, alternate ``step_f``/``step_d`` on a
+``(t + 1) % dispatch_interval`` modulo, harvest FetchReports to numpy. The
+session owns that lifecycle once:
+
+    sess = CrawlSession(cfg)              # mesh/context/state built here
+    rep = sess.run(64)                    # N cycles -> typed CrawlReport
+    sess.inject_failure(1); sess.heal()   # C4 controls
+    sess.checkpoint(d); sess.restore(d)   # train/checkpoint.py hooks
+
+Execution modes (DESIGN.md §11): the **eager** path steps one jitted
+shard_map per cycle (exactly the old loop — one host round-trip per step);
+the **scan** path (:meth:`run_chunk`) fuses a whole dispatch interval —
+``dispatch_interval - 1`` fetch steps then the dispatch step — into a single
+jitted ``lax.scan`` under the shard_map, so the host pays one round-trip per
+interval instead of per step. ``CrawlState``/``FetchReport`` are NamedTuple
+pytrees, which is what lets the scan carry the full crawl state and stack
+the per-step reports. ``run(mode="auto")`` uses the scan path whenever the
+step counter is interval-aligned and no event falls mid-interval; the two
+paths produce bit-identical trajectories (tests/test_session.py).
+
+``make_crawl_step``/``make_spmd_crawler`` (core/crawler.py) remain the
+stable kernel-facing layer the session composes — custom stages and score
+functions thread straight through.
+"""
+from __future__ import annotations
+
+import math
+import time
+from typing import Callable, Dict, Optional, Sequence, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.api.report import CrawlReport, harvest, stats_dict
+from repro.compat import shard_map
+from repro.configs.base import CrawlConfig
+from repro.core import classifier as CLS
+from repro.core import crawler as CR
+from repro.core import ranker
+from repro.core.stages import CrawlState, FetchReport, state_specs
+
+Events = Dict[int, Callable]   # step index -> state transform, applied BEFORE
+                               # that step executes (session-absolute indices)
+
+
+class CrawlSession:
+    """Owns mesh, step functions, crawl state, and the step counter."""
+
+    def __init__(self, cfg: CrawlConfig, mesh=None, *, axes=("data",),
+                 score_fn: Callable = ranker.score_urls,
+                 classify_accuracy: float = CLS.DEFAULT_ACCURACY,
+                 stages: Optional[Sequence] = None,
+                 dispatch_stage: Optional[Callable] = None):
+        from repro.launch.mesh import make_host_mesh
+        self.cfg = cfg
+        self.mesh = mesh if mesh is not None else make_host_mesh()
+        self.axes = axes if isinstance(axes, tuple) else (axes,)
+        self.n_shards = int(math.prod(self.mesh.shape[a] for a in self.axes))
+        self._kw = dict(score_fn=score_fn,
+                        classify_accuracy=classify_accuracy)
+        if stages is not None:
+            self._kw["stages"] = stages
+        if dispatch_stage is not None:
+            self._kw["dispatch_stage"] = dispatch_stage
+        init, self._step_f, self._step_d = CR.make_spmd_crawler(
+            cfg, self.mesh, axes=self.axes, **self._kw)
+        self.state: CrawlState = init()
+        self._t = 0
+        self._chunk_fn = None          # built lazily on first scan use
+
+    # -- introspection ------------------------------------------------------
+
+    @property
+    def t(self) -> int:
+        """Steps taken so far (mirrors ``state.step`` without a device sync)."""
+        return self._t
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        return stats_dict(self.state)
+
+    # -- the two execution paths -------------------------------------------
+
+    def step(self) -> FetchReport:
+        """Advance ONE cycle eagerly; fetch vs dispatch is chosen internally
+        from the step counter. Returns that step's FetchReport."""
+        dispatch = (self._t + 1) % self.cfg.dispatch_interval == 0
+        fn = self._step_d if dispatch else self._step_f
+        self.state, rep = fn(self.state)
+        self._t += 1
+        return rep
+
+    def run_chunk(self) -> FetchReport:
+        """Advance one FUSED dispatch interval (the jitted scan core) and
+        return the interval's stacked FetchReport (leading time axis).
+
+        Requires the step counter to sit on an interval boundary so the
+        chunk's final step is the dispatch step."""
+        iv = self.cfg.dispatch_interval
+        if self._t % iv:
+            raise ValueError(
+                f"run_chunk: step counter t={self._t} is not aligned to "
+                f"dispatch_interval={iv}; use .step() to reach a boundary")
+        if self._chunk_fn is None:
+            self._chunk_fn = self._build_chunk()
+        self.state, reps = self._chunk_fn(self.state)
+        self._t += iv
+        return reps
+
+    def _build_chunk(self):
+        """One jitted shard_map whose body scans the whole interval."""
+        cfg, axes = self.cfg, self.axes
+        local = CR.make_crawl_step(cfg, n_shards=self.n_shards, axes=axes,
+                                   **self._kw)
+        specs = state_specs(axes)
+        # stacked reports grow a leading (unsharded) time axis
+        rep_specs = FetchReport(P(None, axes), P(None, axes))
+        iv = cfg.dispatch_interval
+
+        def chunk_local(state):
+            state, reps = lax.scan(lambda st, _: local(st, dispatch=False),
+                                   state, None, length=iv - 1)
+            state, rep_d = local(state, dispatch=True)
+            reps = jax.tree.map(lambda a, b: jnp.concatenate([a, b[None]], 0),
+                                reps, rep_d)
+            return state, reps
+
+        return jax.jit(shard_map(chunk_local, mesh=self.mesh,
+                                 in_specs=(specs,),
+                                 out_specs=(specs, rep_specs)))
+
+    # -- the driver loop ----------------------------------------------------
+
+    def run(self, steps: int, *, events: Optional[Events] = None,
+            collect: str = "urls", mode: str = "auto") -> CrawlReport:
+        """Drive ``steps`` cycles and return a :class:`CrawlReport`.
+
+        events  — {step index: fn(state) -> state}, applied before that step
+                  (indices are session-absolute, i.e. compared to ``self.t``).
+        collect — "urls" (default: fetched URLs; C1/C2 overlap is computed
+                  lazily on first ``report.overlap`` access) or "counts"
+                  (per-step counts only; urls stays empty).
+        mode    — "auto" fuses every interval the events/alignment allow,
+                  "eager" forces per-step execution, "scan" demands full
+                  fusion (raises if alignment or events make that impossible).
+        """
+        if mode not in ("auto", "eager", "scan"):
+            raise ValueError(f"unknown mode {mode!r}")
+        if collect not in ("urls", "counts"):
+            raise ValueError(f"unknown collect {collect!r}")
+        iv = self.cfg.dispatch_interval
+        events = events or {}
+        t_end = self._t + steps
+        if mode == "scan":
+            bad = self._t % iv or steps % iv or \
+                any(e % iv for e in events if self._t <= e < t_end)
+            if bad:
+                raise ValueError(
+                    "mode='scan' needs an interval-aligned start, an "
+                    "interval-multiple step count, and no mid-interval "
+                    f"events (t={self._t}, steps={steps}, interval={iv})")
+
+        url_parts, per_step = [], []
+        t0 = time.time()
+        while self._t < t_end:
+            t = self._t
+            if t in events:
+                self.state = events[t](self.state)
+            fits = (t % iv == 0) and (t + iv <= t_end)
+            clear = not any(t < e < t + iv for e in events)
+            rep = (self.run_chunk() if mode != "eager" and fits and clear
+                   else self.step())
+            u, c = harvest(rep)
+            per_step.extend(c)
+            if collect == "urls":
+                url_parts.extend(u)
+        seconds = time.time() - t0
+
+        urls = (np.concatenate(url_parts) if url_parts
+                else np.array([], np.uint32))
+        return CrawlReport(urls=urls,
+                           per_step=np.asarray(per_step, np.int64),
+                           stats=stats_dict(self.state), seconds=seconds,
+                           cfg=self.cfg)
+
+    # -- C4 fault controls --------------------------------------------------
+
+    def inject_failure(self, shards: Union[int, Sequence[int]]) -> "CrawlSession":
+        """Mark crawl process(es) dead (wraps ``crawler.mark_dead``)."""
+        shards = [shards] if isinstance(shards, int) else list(shards)
+        self.state = CR.mark_dead(self.state, shards)
+        return self
+
+    def heal(self, shards: Union[int, Sequence[int], None] = None
+             ) -> "CrawlSession":
+        """Rebalance dead shards' domains onto survivors (wraps
+        ``train.fault.heal_crawler``). Defaults to every shard currently
+        dead in ``state.shard_alive`` — the single source of truth, so it
+        stays correct across events, checkpoints, and :meth:`restore`."""
+        from repro.train.fault import heal_crawler
+        if shards is None:
+            shards = [int(s) for s in
+                      np.flatnonzero(~np.asarray(self.state.shard_alive))]
+        elif isinstance(shards, int):
+            shards = [shards]
+        else:
+            shards = list(shards)
+        if not shards:
+            raise ValueError("heal: no dead shards in state and none given")
+        self.state = heal_crawler(self.state, self.cfg, shards, self.n_shards)
+        return self
+
+    # -- persistence (train/checkpoint.py) ----------------------------------
+
+    def checkpoint(self, ckpt_dir: str, *, keep: int = 3) -> str:
+        """Write the full crawl state atomically; returns the path."""
+        from repro.train import checkpoint as ckpt
+        return ckpt.save(ckpt_dir, self._t, self.state, keep=keep)
+
+    def restore(self, ckpt_dir: str, *, step: Optional[int] = None
+                ) -> "CrawlSession":
+        """Restore state (latest step by default) and resync the counter."""
+        from repro.train import checkpoint as ckpt
+        self.state = ckpt.restore(ckpt_dir, self.state, step=step)
+        self._t = int(np.asarray(self.state.step))
+        return self

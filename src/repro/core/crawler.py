@@ -23,6 +23,13 @@ This module is the slim composer: it owns pipeline assembly, failure
 injection, rebalancing, and the shard_map wrapper. Stage bodies, the state
 types, and the stats plumbing live in core/stages.py; both F.select and the
 Bloom probe route through kernels/registry.py per ``cfg.kernel_impl``.
+
+API layering (DESIGN.md §11): this module — ``make_crawl_step`` /
+``make_spmd_crawler`` plus the re-export block below — is the STABLE
+KERNEL-FACING API: what you compose when building a custom driver, stage
+set, or dry-run cell. Drivers (examples, launch/crawl.py, benchmarks)
+should sit one level up on ``repro.api.CrawlSession``, which owns the loop,
+the step counter, and the fused-scan execution path.
 """
 from __future__ import annotations
 
@@ -40,7 +47,9 @@ from repro.core import classifier as CLS
 from repro.core import partitioner as PT
 from repro.core import ranker
 from repro.core import stages as ST
-# re-exported state/stat types (public API predating the stage split)
+# Re-exported state/stat types: together with make_crawl_step /
+# make_spmd_crawler below, this block IS the stable kernel-facing API
+# surface (consumers wanting the driver loop use repro.api instead).
 from repro.core.stages import (CrawlState, FetchReport, NSTAT, SIDX, STATS,
                                Stage, frontier_view, init_state, state_specs,
                                with_frontier)

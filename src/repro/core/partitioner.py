@@ -1,15 +1,24 @@
 """Phase I — creating the partitioned Global URL Frontier, plus the
-control-plane maps that make the system elastic (C3) and fault-tolerant (C4).
+control-plane maps that make the system elastic (C3) and fault-tolerant (C4),
+plus the PARTITIONING-POLICY REGISTRY the crawl stages resolve through.
 
 The domain <-> slot indirection is the key mechanism: frontier/bloom rows are
 indexed by SLOT; ``slot_of_domain`` says where each domain currently lives.
 Rebalancing a dead shard = remapping its domains' slots and migrating rows
 (a permutation gather over the sharded row axis — the real migration cost
 shows up as collective traffic, as it would on hardware).
+
+``CrawlConfig.partitioning`` names a registered :class:`PartitionPolicy`
+(mirroring kernels/registry.py): the three policy decisions a crawl step
+makes — who owns a fetched page, which shard a discovered URL is routed to,
+and which local frontier row a received URL lands in — live together here as
+one named object instead of ``if cfg.partitioning == ...`` branches scattered
+through the stages. Third-party policies register with
+:func:`register_policy` and become selectable by config string.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence, Tuple
+from typing import Callable, Dict, NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -133,6 +142,102 @@ def migrate_rows(arrs, old_map: DomainMap, new_map: DomainMap):
                     jnp.arange(n_slots))
     return jax.tree.map(lambda a: a[src] if a.ndim >= 1 and a.shape[0] == n_slots else a,
                         arrs)
+
+
+# ---------------------------------------------------------------------------
+# partitioning-policy registry (DESIGN.md §9) — the crawl stages' one lookup
+# ---------------------------------------------------------------------------
+
+class PartitionPolicy(NamedTuple):
+    """The three per-step decisions a partitioning scheme owns.
+
+    All callables are traced inside the shard-mapped crawl step, so they must
+    be jittable; the policy object itself is static (resolved at build/trace
+    time from ``cfg.partitioning``).
+
+      canonicalize     — fold URL aliases before dispatch (C2)? webparf does;
+                         URL-oriented baselines ship raw URLs.
+      split_ownership  — (cfg, state, true_dom, sel) -> (own, foreign) masks:
+                         which fetched pages belong to this shard's partition.
+      route            — (cfg, state, n_shards, urls, pred_dom, step) -> dest
+                         shard (int32) for each staged URL at dispatch time.
+      local_row        — (cfg, state, shard, r_slots, urls, pred_dom) ->
+                         (row, ok): local frontier row for each received URL
+                         and a mask of URLs this shard actually owns.
+    """
+    name: str
+    canonicalize: bool
+    split_ownership: Callable
+    route: Callable
+    local_row: Callable
+
+
+_POLICIES: Dict[str, PartitionPolicy] = {}
+
+
+def register_policy(policy: PartitionPolicy) -> PartitionPolicy:
+    """Register a policy under ``policy.name`` (error on conflicting re-use)."""
+    if policy.name in _POLICIES and _POLICIES[policy.name] is not policy:
+        raise ValueError(f"partitioning policy {policy.name!r} registered twice")
+    _POLICIES[policy.name] = policy
+    return policy
+
+
+def policies() -> Tuple[str, ...]:
+    return tuple(sorted(_POLICIES))
+
+
+def get_policy(name: str) -> PartitionPolicy:
+    """Resolve a ``cfg.partitioning`` string to its registered policy."""
+    if name not in _POLICIES:
+        raise KeyError(f"unknown partitioning policy {name!r}; "
+                       f"registered: {policies()}")
+    return _POLICIES[name]
+
+
+def _webparf_split(cfg, state, true_dom, sel):
+    own = (true_dom == state.slot_domain[:, None]) & sel
+    return own, sel & ~own
+
+
+def _webparf_route(cfg, state, n_shards, urls, pred_dom, step):
+    slot = state.slot_of_domain[jnp.clip(pred_dom, 0, cfg.n_domains - 1)]
+    return shard_of_slot(slot, cfg.n_slots, n_shards)
+
+
+def _webparf_row(cfg, state, shard, r_slots, urls, pred_dom):
+    slot = state.slot_of_domain[jnp.clip(pred_dom, 0, cfg.n_domains - 1)]
+    row = slot - shard * r_slots
+    ok = (row >= 0) & (row < r_slots)
+    return jnp.clip(row, 0, r_slots - 1), ok
+
+
+def _all_own(cfg, state, true_dom, sel):
+    return sel, jnp.zeros_like(sel)
+
+
+def _hash_route(cfg, state, n_shards, urls, pred_dom, step):
+    return (W.hash2(urls, 61) % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def _random_route(cfg, state, n_shards, urls, pred_dom, step):
+    # unstable destination: re-keyed every dispatch round
+    return (W.hash2(urls, jnp.asarray(step, jnp.uint32) + 62)
+            % jnp.uint32(n_shards)).astype(jnp.int32)
+
+
+def _hash_row(cfg, state, shard, r_slots, urls, pred_dom):
+    row = (W.hash2(urls, 63) % jnp.uint32(r_slots)).astype(jnp.int32)
+    return row, jnp.ones(urls.shape, bool)
+
+
+# the paper's scheme + its two baselines (DESIGN.md §9)
+WEBPARF = register_policy(PartitionPolicy(
+    "webparf", True, _webparf_split, _webparf_route, _webparf_row))
+URL_HASH = register_policy(PartitionPolicy(
+    "url_hash", False, _all_own, _hash_route, _hash_row))
+RANDOM = register_policy(PartitionPolicy(
+    "random", False, _all_own, _random_route, _hash_row))
 
 
 def split_domains(cfg: CrawlConfig) -> CrawlConfig:

@@ -20,7 +20,10 @@ core/freshness.py) are the shipped examples.
 All frontier pops and Bloom probes route through the kernel registry
 (kernels/registry.py) via ``ctx.impl`` = ``CrawlConfig.kernel_impl``, so the
 same pipeline runs the pure-XLA reference, the Pallas TPU kernels, or the
-interpreted kernel bodies, selected by config.
+interpreted kernel bodies, selected by config. Likewise every partitioning
+decision (ownership split, dispatch routing, local row placement) resolves
+through the policy registry (core/partitioner.py) via ``ctx.policy`` =
+``get_policy(CrawlConfig.partitioning)`` — no policy string branches here.
 """
 from __future__ import annotations
 
@@ -84,6 +87,7 @@ class StageContext(NamedTuple):
     S: int                       # staging (dispatch buffer) capacity
     cap_ex: int                  # per-destination exchange bucket size
     impl: str                    # kernel impl knob ("ref"|"pallas"|...)
+    policy: PT.PartitionPolicy   # resolved from cfg.partitioning (registry)
 
 
 class StepCarry(NamedTuple):
@@ -175,7 +179,8 @@ def make_context(cfg: CrawlConfig, *, n_shards: int, axes,
         cfg=cfg, n_shards=n_shards, axes=axes_t, score_fn=score_fn,
         classify_accuracy=classify_accuracy, cumw=W.zipf_cumweights(cfg),
         k_row=max(1, cfg.fetch_batch // r_local), S=S,
-        cap_ex=max(8, -(-S // n_shards) * 2), impl=cfg.kernel_impl)
+        cap_ex=max(8, -(-S // n_shards) * 2), impl=cfg.kernel_impl,
+        policy=PT.get_policy(cfg.partitioning))
 
 
 # ---------------------------------------------------------------------------
@@ -224,11 +229,7 @@ def fetch_analyze(ctx: StageContext, state: CrawlState, carry: StepCarry
     cfg = ctx.cfg
     sel = carry.sel
     true_dom = CLS.page_domain(carry.urls, cfg)            # (r, k)
-    if cfg.partitioning == "webparf":
-        own = (true_dom == state.slot_domain[:, None]) & sel
-        foreign = sel & ~own
-    else:
-        own, foreign = sel, jnp.zeros_like(sel)
+    own, foreign = ctx.policy.split_ownership(cfg, state, true_dom, sel)
     delta = {"fetched": sel.sum(), "fetch_own": own.sum(),
              "fetch_foreign": foreign.sum()}
     return state, carry._replace(true_dom=true_dom), delta
@@ -249,7 +250,7 @@ def extract_stage(ctx: StageContext, state: CrawlState, carry: StepCarry
     discovered = flat_m.sum()
 
     # dispatcher (local half): canonicalize + exact dedup
-    if cfg.partitioning == "webparf":
+    if ctx.policy.canonicalize:
         flat_u = W.canonical(flat_u, cfg)   # content-informed alias fold
     before = flat_m.sum()
     flat_m = DD.exact_dedup(flat_u[None], flat_m[None])[0]
@@ -286,17 +287,10 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
     # of failure the paper's rebalancing bounds)
     valid = (jnp.arange(S) < n) & state.shard_alive[shard]
 
-    # predict destination domain / shard
+    # predict destination domain / shard (routing is the policy's call)
     pred = CLS.predict_domain(su, ss, cfg, step=state.step,
                               accuracy=ctx.classify_accuracy)
-    if cfg.partitioning == "webparf":
-        slot = state.slot_of_domain[jnp.clip(pred, 0, cfg.n_domains - 1)]
-        dest = PT.shard_of_slot(slot, cfg.n_slots, n_shards)
-    elif cfg.partitioning == "url_hash":
-        dest = (W.hash2(su, 61) % jnp.uint32(n_shards)).astype(jnp.int32)
-    else:  # random — unstable destination (changes every dispatch)
-        dest = (W.hash2(su, state.step.astype(jnp.uint32) + 62)
-                % jnp.uint32(n_shards)).astype(jnp.int32)
+    dest = ctx.policy.route(cfg, state, n_shards, su, pred, state.step)
 
     payload = jnp.stack([su, pred.astype(jnp.uint32),
                          valid.astype(jnp.uint32)], axis=-1)  # (S, 3)
@@ -316,16 +310,10 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
     r_m = DD.exact_dedup(r_u[None], r_m[None])[0]
     delta["dedup_exact"] = before - r_m.sum()
 
-    # local row for each received URL
+    # local row for each received URL (the policy's placement decision)
     r_slots = state.slot_domain.shape[0]               # local row count
-    if cfg.partitioning == "webparf":
-        slot = state.slot_of_domain[jnp.clip(r_pred, 0, cfg.n_domains - 1)]
-        row = slot - shard * r_slots
-        ok = (row >= 0) & (row < r_slots)
-        row = jnp.clip(row, 0, r_slots - 1)
-        r_m = r_m & ok
-    else:
-        row = (W.hash2(r_u, 63) % jnp.uint32(r_slots)).astype(jnp.int32)
+    row, ok = ctx.policy.local_row(cfg, state, shard, r_slots, r_u, r_pred)
+    r_m = r_m & ok
 
     # bucket per local row, Bloom-dedup, insert into the frontier
     M = min(ctx.cap_ex * n_shards, cfg.frontier_capacity)

@@ -1,28 +1,26 @@
-"""Standalone crawl-simulation driver — the paper's system end to end.
+"""Standalone crawl-simulation driver — the paper's system end to end,
+driven through the one session API (repro.api.CrawlSession).
 
   PYTHONPATH=src python -m repro.launch.crawl --steps 64 --domains 32 \
       --partitioning webparf --fail-shard 1 --fail-at 24 --heal-at 40
 
-Prints per-phase throughput and the C1/C2 overlap measurements.
+Prints per-phase throughput and the C1/C2 overlap measurements. ``--mode``
+picks the execution path: ``auto`` (default) fuses each dispatch interval
+into one jitted scan, ``eager`` steps one shard_map per cycle (the two are
+bit-identical; benchmarks/session_scan.py measures the gap).
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
-import time
-
-import numpy as np
 
 
 def main(argv=None):
-    import jax
-    import jax.numpy as jnp
+    import numpy as np
+    from repro.api import CrawlSession
     from repro.configs import get_arch
     from repro.configs.base import scaled
-    from repro.core import crawler as CR
-    from repro.core import webgraph as W
+    from repro.core import partitioner as PT
     from repro.launch.mesh import make_host_mesh
-    from repro.train.fault import heal_crawler
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=64)
@@ -31,11 +29,14 @@ def main(argv=None):
     ap.add_argument("--fetch-batch", type=int, default=32)
     ap.add_argument("--dispatch-interval", type=int, default=4)
     ap.add_argument("--partitioning", default="webparf",
-                    choices=["webparf", "url_hash", "random"])
+                    choices=list(PT.policies()))
     ap.add_argument("--kernel-impl", default="auto",
                     choices=["auto", "ref", "pallas", "interpret"],
                     help="frontier-select/bloom implementation "
                          "(kernels/registry.py; auto = Pallas on TPU)")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "eager", "scan"],
+                    help="driver execution path (repro.api.CrawlSession)")
     ap.add_argument("--classify-accuracy", type=float, default=0.9)
     ap.add_argument("--fail-shard", type=int, default=-1)
     ap.add_argument("--fail-at", type=int, default=-1)
@@ -48,43 +49,56 @@ def main(argv=None):
                  bloom_bits_log2=16, dispatch_capacity=1024,
                  url_space_log2=24, partitioning=args.partitioning,
                  kernel_impl=args.kernel_impl)
-    mesh = make_host_mesh()
-    n_shards = mesh.shape["data"]
-    init, step_f, step_d = CR.make_spmd_crawler(
-        cfg, mesh, axes=("data",), classify_accuracy=args.classify_accuracy)
-    state = init()
+    sess = CrawlSession(cfg, make_host_mesh(),
+                        classify_accuracy=args.classify_accuracy)
     from repro.kernels import registry
-    print(f"{args.partitioning}: {args.domains} domains over {n_shards} shards"
-          f" (kernels: {registry.resolve_impl('frontier_select', cfg.kernel_impl)})")
+    print(f"{args.partitioning}: {args.domains} domains over "
+          f"{sess.n_shards} shards (kernels: "
+          f"{registry.resolve_impl('frontier_select', cfg.kernel_impl)})")
 
-    fetched_all = []
-    t0 = time.time()
-    for t in range(args.steps):
-        if t == args.fail_at and args.fail_shard >= 0:
-            state = CR.mark_dead(state, [args.fail_shard])
-            print(f"-- step {t}: shard {args.fail_shard} died")
-        if t == args.heal_at and args.fail_shard >= 0:
-            state = heal_crawler(state, cfg, [args.fail_shard], n_shards)
-            print(f"-- step {t}: rebalanced dead shard's domains")
-        fn = step_d if (t + 1) % cfg.dispatch_interval == 0 else step_f
-        state, rep = fn(state)
-        m = np.asarray(rep.fetched_mask)
-        fetched_all.append(np.asarray(rep.fetched_urls)[m])
-        if (t + 1) % 16 == 0:
-            print(f"step {t+1:4d}: frontier={int(np.asarray(state.f_valid).sum())}"
-                  f" fetched_total={sum(len(f) for f in fetched_all)}")
+    # C4 controls fire between run segments, at their exact step (fail
+    # before heal when both land on the same step, like the old loop)
+    actions = {}
+    if args.fail_shard >= 0 and args.fail_at >= 0:
+        actions.setdefault(args.fail_at, []).append("fail")
+        if args.heal_at >= 0:
+            actions.setdefault(args.heal_at, []).append("heal")
 
-    dt = time.time() - t0
-    urls = np.concatenate(fetched_all)
-    canon = np.asarray(W.canonical(jnp.asarray(urls), cfg))
-    stats = np.asarray(state.stats).sum(0)
-    sd = {n: int(v) for n, v in zip(CR.STATS, stats)}
-    print(f"\n{len(urls)} pages in {dt:.1f}s ({len(urls)/dt:.0f} pages/s simulated)")
-    print(f"C1 URL overlap:     {len(urls) - len(np.unique(urls))} duplicate fetches"
-          f" ({100*(1 - len(np.unique(urls))/max(len(urls),1)):.2f}%)")
-    print(f"C2 content overlap: {len(canon) - len(np.unique(canon))} duplicate contents"
-          f" ({100*(1 - len(np.unique(canon))/max(len(canon),1)):.2f}%)")
-    print(f"C5 exchange: {sd['dispatch_rounds']} rounds, {sd['dispatch_sent']} URLs sent")
+    # progress segments of ~16 steps, aligned to the dispatch interval so
+    # --mode scan stays legal for any interval
+    iv = cfg.dispatch_interval
+    stride = max(iv, 16 - 16 % iv)
+    reports = []
+    while sess.t < args.steps:
+        for act in actions.get(sess.t, ()):
+            if act == "fail":
+                sess.inject_failure(args.fail_shard)
+                print(f"-- step {sess.t}: shard {args.fail_shard} died")
+            else:
+                sess.heal()
+                print(f"-- step {sess.t}: rebalanced dead shard's domains")
+        nxt = min([t for t in actions if t > sess.t]
+                  + [args.steps, sess.t + stride])
+        reports.append(sess.run(nxt - sess.t, mode=args.mode))
+        print(f"step {sess.t:4d}: "
+              f"frontier={int(np.asarray(sess.state.f_valid).sum())}"
+              f" fetched_total={sum(r.fetched for r in reports)}")
+
+    urls = np.concatenate([r.urls for r in reports])
+    dt = sum(r.seconds for r in reports)
+    from repro.api import overlap_metrics
+    ov = overlap_metrics(urls, cfg)
+    sd = sess.stats
+    print(f"\n{len(urls)} pages in {dt:.1f}s "
+          f"({len(urls)/max(dt, 1e-9):.0f} pages/s simulated)")
+    print(f"C1 URL overlap:     "
+          f"{len(urls) - len(np.unique(urls))} duplicate fetches"
+          f" ({100 * ov['url_dup']:.2f}%)")
+    print(f"C2 content overlap: "
+          f"{round(ov['fetched'] * ov['content_dup'])} duplicate contents"
+          f" ({100 * ov['content_dup']:.2f}%)")
+    print(f"C5 exchange: {sd['dispatch_rounds']} rounds, "
+          f"{sd['dispatch_sent']} URLs sent")
     print("stats:", sd)
     return 0
 

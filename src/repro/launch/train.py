@@ -24,18 +24,10 @@ import numpy as np
 def crawl_corpus(crawl_cfg, steps: int, mesh):
     """Run the WebParF crawler and return the fetched URL set (the crawled
     collection feeding the index/training, paper §IV.B)."""
-    import jax
-    from repro.core import crawler as CR
+    from repro.api import CrawlSession
 
-    init, step_f, step_d = CR.make_spmd_crawler(crawl_cfg, mesh, axes=("data",))
-    state = init()
-    fetched = []
-    for t in range(steps):
-        fn = step_d if (t + 1) % crawl_cfg.dispatch_interval == 0 else step_f
-        state, rep = fn(state)
-        m = np.asarray(rep.fetched_mask)
-        fetched.append(np.asarray(rep.fetched_urls)[m])
-    return np.concatenate(fetched), state
+    sess = CrawlSession(crawl_cfg, mesh)
+    return sess.run(steps).urls, sess.state
 
 
 def train_lm(args):
