@@ -89,6 +89,31 @@ def bench_bloom(R=128, M=1024, bits_log2=16, k=4):
         print(f"  {impl:>10s}: {dt*1e3:8.2f} ms{tag}")
 
 
+def bench_opic_update(B=1, R=512, N=16384, tile=256):
+    import jax.numpy as jnp
+    from repro.kernels.opic_update.ops import scatter_cash
+
+    rng = np.random.default_rng(2)
+    cash = jnp.asarray(rng.random((B, R)), jnp.float32)
+    rows = jnp.asarray(rng.integers(0, R, (B, N)), jnp.int32)
+    contrib = jnp.asarray(rng.random((B, N)) * 0.01, jnp.float32)
+    mask = jnp.asarray(rng.random((B, N)) < 0.8)
+
+    print(f"\n-- opic_update scatter-add (B={B}, R={R}, N={N}) --")
+    ref = None
+    for impl in _impls():
+        dt = _bench(lambda i=impl: scatter_cash(cash, rows, contrib, mask,
+                                                impl=i, tile=tile))
+        out = scatter_cash(cash, rows, contrib, mask, impl=impl, tile=tile)
+        tag = ""
+        if ref is None:
+            ref = out
+        else:
+            same = np.array_equal(np.asarray(ref), np.asarray(out))
+            tag = "  (== ref)" if same else "  (MISMATCH vs ref)"
+        print(f"  {impl:>10s}: {dt*1e3:8.2f} ms{tag}")
+
+
 def bench_crawl_step(steps=16):
     from repro.configs import get_arch
     from repro.configs.base import scaled
@@ -116,6 +141,7 @@ def main(smoke: bool = False):
     import repro.kernels.bloom.ops  # noqa: F401
     import repro.kernels.flash_attention.ops  # noqa: F401
     import repro.kernels.frontier_select.ops  # noqa: F401
+    import repro.kernels.opic_update.ops  # noqa: F401
 
     print(f"backend: {jax.default_backend()}")
     for kern in registry.kernels():
@@ -124,10 +150,12 @@ def main(smoke: bool = False):
     if smoke:
         bench_frontier_select(R=16, C=256, k=8)
         bench_bloom(R=16, M=128, bits_log2=12)
+        bench_opic_update(B=1, R=64, N=1024)
         bench_crawl_step(steps=4)
     else:
         bench_frontier_select()
         bench_bloom()
+        bench_opic_update()
         bench_crawl_step()
 
 

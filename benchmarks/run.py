@@ -11,8 +11,8 @@ import sys
 import time
 import traceback
 
-SUITES = ("overlap", "dispatch", "kernel_dispatch", "session_scan", "scaling",
-          "fault", "roofline")
+SUITES = ("overlap", "dispatch", "kernel_dispatch", "ordering",
+          "session_scan", "scaling", "fault", "roofline")
 
 
 def main(argv=None) -> None:

@@ -15,7 +15,6 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.api import CrawlSession
 from repro.configs import get_reduced
@@ -39,6 +38,11 @@ def main():
           f"({len(np.unique(urls))} unique — C1), "
           f"{stats['dispatch_rounds']} batched exchanges (C5), "
           f"{stats['dedup_bloom']} bloom dedups — {report.summary()}")
+    q = report.ordering_quality
+    print(f"  ordering[{cfg.ordering}]: importance mass "
+          f"{q['importance_mass']:.1f} over {q['unique_pages']} unique pages "
+          f"(coverage AUC {q['coverage_auc']:.3f}) — try ordering='opic' "
+          f"(repro.ordering registry)")
 
     # --- train on the crawl -------------------------------------------------
     lm_cfg = scaled(get_reduced("qwen2-1.5b"), dtype="float32")

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import numpy as np
 
@@ -23,9 +23,12 @@ from repro.core.stages import STATS, FetchReport
 
 
 def stats_dict(state) -> Dict[str, int]:
-    """Sum the per-shard stat counters into one named dict."""
+    """Sum the per-shard stat counters into one named dict, plus the
+    frontier's own event counters (FIFO tie-break rebases)."""
     s = np.asarray(state.stats).sum(0)
-    return {n: int(v) for n, v in zip(STATS, s)}
+    out = {n: int(v) for n, v in zip(STATS, s)}
+    out["fifo_rebase"] = int(np.asarray(state.f_rebased).sum())
+    return out
 
 
 def overlap_metrics(urls: np.ndarray, cfg) -> Dict[str, float]:
@@ -73,6 +76,16 @@ class CrawlReport:
         if self.cfg is None:
             return dict(url_dup=0.0, content_dup=0.0, fetched=0)
         return overlap_metrics(self.urls, self.cfg)
+
+    @functools.cached_property
+    def ordering_quality(self) -> Dict[str, float]:
+        """Ordering-quality metrics (repro/ordering/quality.py): importance-
+        weighted coverage of the fetched pages, how front-loaded it was
+        (AUC), and hub-page counts. Lazy like ``overlap``."""
+        from repro.ordering.quality import ordering_quality
+        if self.cfg is None:
+            return {}
+        return ordering_quality(self.urls, self.per_step, self.cfg)
 
     @property
     def steps(self) -> int:

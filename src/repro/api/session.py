@@ -43,7 +43,6 @@ from repro.compat import shard_map
 from repro.configs.base import CrawlConfig
 from repro.core import classifier as CLS
 from repro.core import crawler as CR
-from repro.core import ranker
 from repro.core.stages import CrawlState, FetchReport, state_specs
 
 Events = Dict[int, Callable]   # step index -> state transform, applied BEFORE
@@ -54,10 +53,17 @@ class CrawlSession:
     """Owns mesh, step functions, crawl state, and the step counter."""
 
     def __init__(self, cfg: CrawlConfig, mesh=None, *, axes=("data",),
-                 score_fn: Callable = ranker.score_urls,
+                 score_fn: Optional[Callable] = None,
                  classify_accuracy: float = CLS.DEFAULT_ACCURACY,
                  stages: Optional[Sequence] = None,
+                 extra_stages: Sequence = (),
                  dispatch_stage: Optional[Callable] = None):
+        """``score_fn`` (legacy ``(urls, cfg)``) overrides the ordering
+        registry's scorer (default: ``cfg.ordering`` decides, DESIGN.md §12).
+        ``extra_stages`` slots scenario stages (``make_politeness_stage``,
+        ``make_revisit_stage``, ...) into the assembled pipeline by their
+        ``placement`` attribute; ``stages`` replaces the whole pipeline
+        verbatim (expert mode)."""
         from repro.launch.mesh import make_host_mesh
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else make_host_mesh()
@@ -67,6 +73,8 @@ class CrawlSession:
                         classify_accuracy=classify_accuracy)
         if stages is not None:
             self._kw["stages"] = stages
+        if extra_stages:
+            self._kw["extra_stages"] = tuple(extra_stages)
         if dispatch_stage is not None:
             self._kw["dispatch_stage"] = dispatch_stage
         init, self._step_f, self._step_d = CR.make_spmd_crawler(

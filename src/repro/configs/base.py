@@ -213,6 +213,10 @@ class CrawlConfig:
     seed_urls_per_domain: int = 32    # Phase I hub seeds per domain pool
     zipf_a: float = 1.1               # domain-size skew
     partitioning: str = "webparf"     # "webparf" | "url_hash" | "random" (baselines)
+    ordering: str = "backlink"        # URL-ordering policy per partitioned queue:
+                                      # "fifo" | "backlink" | "opic" | "learned"
+                                      # (repro.ordering registry; backlink = the
+                                      # ranker's static linear blend)
     slot_factor: int = 2              # frontier rows per domain (spare slots so
                                       # C4 rebalancing never merges queues)
     kernel_impl: str = "auto"         # frontier-select/bloom implementation:

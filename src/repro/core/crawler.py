@@ -45,7 +45,6 @@ from repro.compat import shard_map
 from repro.configs.base import CrawlConfig
 from repro.core import classifier as CLS
 from repro.core import partitioner as PT
-from repro.core import ranker
 from repro.core import stages as ST
 # Re-exported state/stat types: together with make_crawl_step /
 # make_spmd_crawler below, this block IS the stable kernel-facing API
@@ -62,20 +61,29 @@ __all__ = [
 
 
 def make_crawl_step(cfg: CrawlConfig, *, n_shards: int, axes,
-                    score_fn: Callable = ranker.score_urls,
+                    score_fn: Optional[Callable] = None,
                     classify_accuracy: float = CLS.DEFAULT_ACCURACY,
                     stages: Optional[Sequence[Stage]] = None,
+                    extra_stages: Sequence[Stage] = (),
                     dispatch_stage: Stage = ST.dispatch_exchange):
     """Build the shard-local step. Returns fn(state_local, dispatch: bool).
 
-    ``stages`` overrides the per-step pipeline (default
-    ``stages.DEFAULT_PIPELINE``); the first stage must create the StepCarry
-    (``stages.allocate`` does). ``dispatch_stage`` runs only on exchange
-    steps."""
+    ``score_fn`` (legacy ``(urls, cfg)`` signature) overrides the ordering
+    registry's scorer; by default ``cfg.ordering`` decides. ``extra_stages``
+    slot scenario stages (politeness, revisit, ...) into the assembled
+    pipeline by their ``placement`` attribute; ``stages`` replaces the
+    WHOLE per-step pipeline verbatim (expert mode — the first stage must
+    create the StepCarry, as ``stages.allocate`` does, and a stateful
+    ordering's update stage must be included by hand). ``dispatch_stage``
+    runs only on exchange steps."""
     ctx = ST.make_context(cfg, n_shards=n_shards, axes=axes,
                           score_fn=score_fn,
                           classify_accuracy=classify_accuracy)
-    pipeline = ST.DEFAULT_PIPELINE if stages is None else tuple(stages)
+    if stages is None:
+        pipeline = ST.assemble_pipeline(ctx, extra_stages)
+    else:
+        assert not extra_stages, "pass either stages= or extra_stages=, not both"
+        pipeline = tuple(stages)
     assert pipeline, "crawl pipeline needs at least one stage"
 
     def local_step(state: CrawlState, *, dispatch: bool
@@ -113,8 +121,19 @@ def apply_rebalance(state: CrawlState, cfg: CrawlConfig,
     moved = PT.migrate_rows(
         dict(f_url=state.f_url, f_pri=state.f_pri, f_valid=state.f_valid,
              f_arrival=state.f_arrival, f_dropped=state.f_dropped,
-             f_inserted=state.f_inserted, bloom_bits=state.bloom_bits),
+             f_inserted=state.f_inserted, f_rebased=state.f_rebased,
+             bloom_bits=state.bloom_bits, order_state=state.order_state),
         old_dm, new_dm)
+    # migrate_rows is a gather, so a moved domain's row survives as a stale
+    # COPY at its old (now unmapped) slot. Frontier rows there are inert
+    # (the old slot belongs to a dead shard), but order_state carries
+    # CONSERVED ordering cash (repro/ordering/opic.py) — scrub the duplicate
+    # so total cash stays exact across a C4 rebalance.
+    slots = jnp.arange(state.order_state.shape[0])
+    old_dom = old_dm.domain_of_slot
+    dup = ((new_dm.domain_of_slot < 0) & (old_dom >= 0) &
+           (new_dm.slot_of_domain[jnp.clip(old_dom, 0)] != slots))
+    moved["order_state"] = jnp.where(dup[:, None], 0.0, moved["order_state"])
     return state._replace(
         **moved, slot_domain=new_dm.domain_of_slot,
         slot_of_domain=new_dm.slot_of_domain, shard_alive=new_dm.shard_alive)

@@ -28,6 +28,7 @@ class Frontier(NamedTuple):
     arrival: jax.Array      # (R,) int32 — per-row arrival counter (FIFO order)
     n_dropped: jax.Array    # (R,) int32 — overflow drops (reported, C3/C5)
     n_inserted: jax.Array   # (R,) int32
+    n_rebased: jax.Array    # (R,) int32 — FIFO tie-break rebase events
 
 
 def init_frontier(n_rows: int, capacity: int) -> Frontier:
@@ -38,16 +39,61 @@ def init_frontier(n_rows: int, capacity: int) -> Frontier:
         arrival=jnp.zeros((n_rows,), jnp.int32),
         n_dropped=jnp.zeros((n_rows,), jnp.int32),
         n_inserted=jnp.zeros((n_rows,), jnp.int32),
+        n_rebased=jnp.zeros((n_rows,), jnp.int32),
     )
 
 
 def encode_priority(score: jax.Array, arrival_seq: jax.Array,
                     n_buckets: int) -> jax.Array:
     """score in [0,1) -> bucketed priority with FIFO tie-break (Fig. 5):
-    higher bucket wins; within a bucket, earlier arrival wins."""
+    higher bucket wins; within a bucket, earlier arrival wins.
+
+    bucket * _FIFO_RANGE must stay below 2^24 (f32 integer-exact range) or
+    distinct arrivals collapse to the same float — ``insert`` rebases the
+    arrival sequence before it can saturate the clamp here."""
     bucket = jnp.clip((score * n_buckets).astype(jnp.int32), 0, n_buckets - 1)
     return (bucket.astype(jnp.float32) * _FIFO_RANGE
             - jnp.minimum(arrival_seq, _FIFO_RANGE - 1).astype(jnp.float32))
+
+
+def _decode_arrival(priority: jax.Array) -> jax.Array:
+    """Invert encode_priority for valid slots: pri = b*RANGE - a, a in
+    [0, RANGE) -> b = ceil(pri / RANGE), a = b*RANGE - pri. Exact in f32
+    because all encoded values are integers < 2^24."""
+    b = jnp.ceil(priority / _FIFO_RANGE)
+    return b * _FIFO_RANGE - priority
+
+
+def _rebase_fifo(f: Frontier, incoming: jax.Array) -> Frontier:
+    """Compact each row's FIFO arrival sequence to live RANKS when the
+    counter nears ``_FIFO_RANGE`` (long crawls: the counter grows by the
+    full batch size on every insert, drops included, so it saturates far
+    earlier than 2^20 *live* URLs). Same-bucket ordering after the old
+    clamp was silently arbitrary; rank compaction is exact — live arrivals
+    map to 0..n_live-1 preserving their strict order (stable argsort; all
+    values are f32 integers < 2^24, so encode/decode round-trips bit-for-
+    bit) — and the counter restarts at n_live <= capacity, guaranteeing
+    headroom no matter how a long-lived low-arrival entry pins the range.
+    The O(C log C) sort is behind a ``lax.cond``, so the common no-rebase
+    insert keeps its O(C) cost. Events are counted in ``n_rebased``
+    (surfaced as the ``fifo_rebase`` stat)."""
+    need = (f.arrival + incoming) >= (_FIFO_RANGE - 1)              # (R,)
+
+    def compact(fr: Frontier) -> Frontier:
+        arr = _decode_arrival(fr.priority)                          # (R, C)
+        key = jnp.where(fr.valid, arr, jnp.float32(_FIFO_RANGE))
+        order = jnp.argsort(key, axis=1, stable=True)
+        rank = jnp.argsort(order, axis=1, stable=True).astype(jnp.float32)
+        bucket = jnp.ceil(fr.priority / _FIFO_RANGE)
+        pri = jnp.where(fr.valid & need[:, None],
+                        bucket * _FIFO_RANGE - rank, fr.priority)
+        n_live = fr.valid.sum(axis=1).astype(jnp.int32)
+        return fr._replace(
+            priority=pri,
+            arrival=jnp.where(need, n_live, fr.arrival),
+            n_rebased=fr.n_rebased + need.astype(jnp.int32))
+
+    return lax.cond(need.any(), compact, lambda fr: fr, f)
 
 
 def select_arrays(url: jax.Array, priority: jax.Array, valid: jax.Array,
@@ -89,6 +135,8 @@ def insert(f: Frontier, urls: jax.Array, scores: jax.Array,
     dropped and counted (bounded queues — DESIGN.md §2)."""
     R, C = f.url.shape
     M = urls.shape[1]
+    incoming = mask.sum(axis=1).astype(jnp.int32)                   # (R,)
+    f = _rebase_fifo(f, incoming)
     # FIFO arrival sequence for the incoming batch
     order = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1          # (R, M)
     pri = encode_priority(scores, f.arrival[:, None] + order, n_buckets)
@@ -124,9 +172,10 @@ def insert(f: Frontier, urls: jax.Array, scores: jax.Array,
     val2 = put(f.valid, fits, False) | f.valid
     return Frontier(
         url=url2, priority=pri2, valid=val2,
-        arrival=f.arrival + mask.sum(axis=1).astype(jnp.int32),
+        arrival=f.arrival + incoming,
         n_dropped=f.n_dropped + (mask & ~fits).sum(axis=1).astype(jnp.int32),
         n_inserted=f.n_inserted + fits.sum(axis=1).astype(jnp.int32),
+        n_rebased=f.n_rebased,
     )
 
 

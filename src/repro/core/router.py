@@ -46,10 +46,14 @@ def position_in_bucket(dest: jax.Array, n_dest: int, capacity: int,
 
 def pack_buckets(payload: jax.Array, dest: jax.Array, n_dest: int,
                  capacity: int, *, valid: Optional[jax.Array] = None,
-                 fill=0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                 fill=0, return_keep: bool = False):
     """Scatter items (N, ...) into per-destination buckets (n_dest, capacity, ...).
 
-    Returns (buckets, bucket_mask (n_dest, capacity) bool, dropped count)."""
+    Returns (buckets, bucket_mask (n_dest, capacity) bool, dropped count);
+    with ``return_keep`` also the per-ITEM keep mask (which inputs made it
+    into a bucket) — callers that must account for every dropped item (the
+    dispatcher's conserved value channel) get it without recomputing the
+    one-hot cumsum."""
     slot, keep = position_in_bucket(dest, n_dest, capacity, valid=valid)
     s_safe = jnp.where(keep, slot, capacity - 1)
     buckets = jnp.full((n_dest, capacity) + payload.shape[1:], fill, payload.dtype)
@@ -60,6 +64,8 @@ def pack_buckets(payload: jax.Array, dest: jax.Array, n_dest: int,
     mask = jnp.zeros((n_dest, capacity), jnp.bool_)
     mask = mask.at[dest, s_safe].max(keep, mode="drop")
     n_valid = valid.sum() if valid is not None else dest.size
+    if return_keep:
+        return buckets, mask, n_valid - keep.sum(), keep
     return buckets, mask, n_valid - keep.sum()
 
 

@@ -24,10 +24,20 @@ interpreted kernel bodies, selected by config. Likewise every partitioning
 decision (ownership split, dispatch routing, local row placement) resolves
 through the policy registry (core/partitioner.py) via ``ctx.policy`` =
 ``get_policy(CrawlConfig.partitioning)`` — no policy string branches here.
+
+URL ordering is the third registry (repro/ordering, DESIGN.md §12):
+``ctx.score_fn`` is produced by the ordering policy named in
+``CrawlConfig.ordering`` and is state-aware — ``score_fn(urls, cfg, state)``
+— so stateful estimators (OPIC) can rank by importance learned during the
+crawl. The stages themselves carry no ordering logic; they provide one
+generic mechanism the policies build on: a per-URL float VALUE CHANNEL
+(``StepCarry.link_cash`` -> ``staging_val`` -> a 4th dispatch payload lane)
+that is conserved end to end — every value is either delivered to its owner
+row's ``order_state`` or refunded to its source row, never dropped.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,11 +72,16 @@ class CrawlState(NamedTuple):
     f_arrival: jax.Array
     f_dropped: jax.Array
     f_inserted: jax.Array
+    f_rebased: jax.Array         # (n_slots,) FIFO tie-break rebase events
     bloom_bits: jax.Array
     slot_domain: jax.Array       # (n_slots,) domain living in each slot
+    order_state: jax.Array       # (n_slots, ORD_WIDTH) ordering-policy state
+                                 # (OPIC: [:, 0] cash, [:, 1] history; zeros
+                                 # for stateless policies)
     # shard-sharded (n_shards, ...)
     staging_url: jax.Array       # (n_shards, S) uint32
     staging_src: jax.Array       # (n_shards, S) int32 source-page domain
+    staging_val: jax.Array       # (n_shards, S) f32 piggybacked URL values
     staging_n: jax.Array         # (n_shards,) int32
     stats: jax.Array             # (n_shards, NSTAT) int32
     # replicated
@@ -80,7 +95,7 @@ class StageContext(NamedTuple):
     cfg: CrawlConfig
     n_shards: int
     axes: Tuple[str, ...]
-    score_fn: Callable
+    score_fn: Callable           # (urls, cfg, state) -> scores in [0, 1)
     classify_accuracy: float
     cumw: jax.Array              # static Zipf cumulative weights
     k_row: int                   # URLs popped per domain row per step
@@ -88,6 +103,7 @@ class StageContext(NamedTuple):
     cap_ex: int                  # per-destination exchange bucket size
     impl: str                    # kernel impl knob ("ref"|"pallas"|...)
     policy: PT.PartitionPolicy   # resolved from cfg.partitioning (registry)
+    ordering: "object"           # resolved from cfg.ordering (repro.ordering)
 
 
 class StepCarry(NamedTuple):
@@ -97,6 +113,13 @@ class StepCarry(NamedTuple):
     urls: jax.Array              # (r, k) URLs popped this step
     sel: jax.Array               # (r, k) actually-fetched mask
     true_dom: jax.Array          # (r, k) analyzer's domain (fetch_analyze)
+    link_cash: jax.Array         # (r, k, O) per-outlink value to piggyback on
+                                 # dispatch (ordering policies fill it; zeros
+                                 # otherwise)
+    links: Optional[jax.Array] = None
+                                 # (r, k, O) cached outlink parse — a stage
+                                 # that parses (e.g. OPIC's update) stores it
+                                 # so extract_stage doesn't re-parse
 
 
 class FetchReport(NamedTuple):
@@ -115,13 +138,13 @@ Stage = Callable[[StageContext, CrawlState, Optional[StepCarry]],
 
 def frontier_view(s: CrawlState) -> F.Frontier:
     return F.Frontier(s.f_url, s.f_pri, s.f_valid, s.f_arrival,
-                      s.f_dropped, s.f_inserted)
+                      s.f_dropped, s.f_inserted, s.f_rebased)
 
 
 def with_frontier(s: CrawlState, f: F.Frontier) -> CrawlState:
     return s._replace(f_url=f.url, f_pri=f.priority, f_valid=f.valid,
                       f_arrival=f.arrival, f_dropped=f.n_dropped,
-                      f_inserted=f.n_inserted)
+                      f_inserted=f.n_inserted, f_rebased=f.n_rebased)
 
 
 def apply_delta(state: CrawlState, delta: StatsDelta) -> CrawlState:
@@ -144,13 +167,16 @@ def init_state(cfg: CrawlConfig, n_shards: int) -> CrawlState:
     _, bloom = DD.probe_insert(bloom, f.url, f.valid, k=cfg.bloom_hashes,
                                impl=cfg.kernel_impl)
     S = cfg.dispatch_capacity
+    from repro.ordering.policies import get_ordering
     return CrawlState(
         f_url=f.url, f_pri=f.priority, f_valid=f.valid, f_arrival=f.arrival,
-        f_dropped=f.n_dropped, f_inserted=f.n_inserted,
+        f_dropped=f.n_dropped, f_inserted=f.n_inserted, f_rebased=f.n_rebased,
         bloom_bits=bloom.bits,
         slot_domain=dm.domain_of_slot,
+        order_state=get_ordering(cfg.ordering).init_state(cfg, n_shards),
         staging_url=jnp.zeros((n_shards, S), jnp.uint32),
         staging_src=jnp.zeros((n_shards, S), jnp.int32),
+        staging_val=jnp.zeros((n_shards, S), jnp.float32),
         staging_n=jnp.zeros((n_shards,), jnp.int32),
         stats=jnp.zeros((n_shards, NSTAT), jnp.int32),
         slot_of_domain=dm.slot_of_domain,
@@ -164,23 +190,33 @@ def state_specs(axes) -> CrawlState:
     row = P(axes)
     return CrawlState(
         f_url=row, f_pri=row, f_valid=row, f_arrival=row, f_dropped=row,
-        f_inserted=row, bloom_bits=row, slot_domain=row,
-        staging_url=row, staging_src=row, staging_n=row, stats=row,
+        f_inserted=row, f_rebased=row, bloom_bits=row, slot_domain=row,
+        order_state=row,
+        staging_url=row, staging_src=row, staging_val=row, staging_n=row,
+        stats=row,
         slot_of_domain=P(), shard_alive=P(), step=P(),
     )
 
 
 def make_context(cfg: CrawlConfig, *, n_shards: int, axes,
-                 score_fn: Callable, classify_accuracy: float) -> StageContext:
+                 score_fn: Optional[Callable] = None,
+                 classify_accuracy: float) -> StageContext:
+    """``score_fn`` override (legacy ``(urls, cfg)`` signature, e.g. a learned
+    scorer) wins over the registry; by default ``cfg.ordering`` names the
+    :class:`repro.ordering.OrderingPolicy` that produces the scorer."""
+    from repro.ordering.policies import as_score_fn, get_ordering
     axes_t = axes if isinstance(axes, tuple) else (axes,)
     r_local = cfg.n_slots // n_shards
     S = cfg.dispatch_capacity
+    ordering = get_ordering(cfg.ordering)
+    score = (as_score_fn(score_fn) if score_fn is not None else
+             ordering.make_score_fn(cfg, n_shards=n_shards, axes=axes_t))
     return StageContext(
-        cfg=cfg, n_shards=n_shards, axes=axes_t, score_fn=score_fn,
+        cfg=cfg, n_shards=n_shards, axes=axes_t, score_fn=score,
         classify_accuracy=classify_accuracy, cumw=W.zipf_cumweights(cfg),
         k_row=max(1, cfg.fetch_batch // r_local), S=S,
         cap_ex=max(8, -(-S // n_shards) * 2), impl=cfg.kernel_impl,
-        policy=PT.get_policy(cfg.partitioning))
+        policy=PT.get_policy(cfg.partitioning), ordering=ordering)
 
 
 # ---------------------------------------------------------------------------
@@ -209,16 +245,18 @@ def allocate(ctx: StageContext, state: CrawlState,
         # ties at the threshold could exceed the budget by a few URLs —
         # acceptable (threads block briefly); give back the rest
         over = pre_sel & ~budget
-        fr = F.insert(fr, urls, ctx.score_fn(urls, cfg), over,
+        fr = F.insert(fr, urls, ctx.score_fn(urls, cfg, state), over,
                       n_buckets=cfg.n_priority_buckets)
         pre_sel = pre_sel & budget
     sel = pre_sel & alive
     give_back = pre_sel & ~alive
-    fr = F.insert(fr, urls, ctx.score_fn(urls, cfg), give_back,
+    fr = F.insert(fr, urls, ctx.score_fn(urls, cfg, state), give_back,
                   n_buckets=cfg.n_priority_buckets)
 
     carry = StepCarry(shard=shard, alive=alive, urls=urls, sel=sel,
-                      true_dom=jnp.zeros(urls.shape, jnp.int32))
+                      true_dom=jnp.zeros(urls.shape, jnp.int32),
+                      link_cash=jnp.zeros(
+                          urls.shape + (cfg.outlinks_per_page,), jnp.float32))
     return with_frontier(state, fr), carry, {"revived": give_back.sum()}
 
 
@@ -241,12 +279,18 @@ def extract_stage(ctx: StageContext, state: CrawlState, carry: StepCarry
     the batch, and append to the staging buffer awaiting the next exchange."""
     cfg = ctx.cfg
     S = ctx.S
-    links = W.outlinks(carry.urls, cfg, ctx.cumw)          # (r, k, O)
+    links = (W.outlinks(carry.urls, cfg, ctx.cumw)         # (r, k, O)
+             if carry.links is None else carry.links)
     lmask = jnp.broadcast_to(carry.sel[..., None], links.shape)
     lsrc = jnp.broadcast_to(carry.true_dom[..., None], links.shape)
+    lrow = jnp.broadcast_to(
+        jnp.arange(links.shape[0], dtype=jnp.int32)[:, None, None],
+        links.shape)                                       # source frontier row
     flat_u = links.reshape(-1)
     flat_m = lmask.reshape(-1)
     flat_s = lsrc.reshape(-1)
+    flat_v = carry.link_cash.reshape(-1)                   # piggybacked value
+    flat_r = lrow.reshape(-1)
     discovered = flat_m.sum()
 
     # dispatcher (local half): canonicalize + exact dedup
@@ -264,11 +308,23 @@ def extract_stage(ctx: StageContext, state: CrawlState, carry: StepCarry
     pos_safe = jnp.where(fits, pos, S)
     su = jnp.concatenate([state.staging_url[0], jnp.zeros((1,), jnp.uint32)])
     ss = jnp.concatenate([state.staging_src[0], jnp.zeros((1,), jnp.int32)])
+    sv = jnp.concatenate([state.staging_val[0], jnp.zeros((1,), jnp.float32)])
     su = su.at[pos_safe].set(jnp.where(fits, flat_u, 0))[None, :S]
     ss = ss.at[pos_safe].set(jnp.where(fits, flat_s, 0))[None, :S]
+    sv = sv.at[pos_safe].set(jnp.where(fits, flat_v, 0.0))[None, :S]
     sn = (n0 + fits.sum()).astype(jnp.int32)[None]
 
-    state = state._replace(staging_url=su, staging_src=ss, staging_n=sn)
+    # value-channel conservation: links dropped here (batch dedup or staging
+    # overflow) REFUND their value to the source row's order_state instead of
+    # losing it (a no-op for stateless orderings — link_cash is zeros)
+    lost = lmask.reshape(-1) & ~fits
+    r_slots = state.order_state.shape[0]
+    order_state = state.order_state.at[
+        jnp.where(lost, flat_r, r_slots), 0].add(
+        jnp.where(lost, flat_v, 0.0), mode="drop")
+
+    state = state._replace(staging_url=su, staging_src=ss, staging_val=sv,
+                           staging_n=sn, order_state=order_state)
     delta = {"discovered": discovered, "dedup_exact": dedup_exact,
              "staging_drop": (flat_m & ~fits).sum()}
     return state, carry, delta
@@ -283,9 +339,12 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
     S, n_shards = ctx.S, ctx.n_shards
     shard = carry.shard
     su, ss, n = state.staging_url[0], state.staging_src[0], state.staging_n[0]
+    sv = state.staging_val[0]
+    r_slots = state.slot_domain.shape[0]               # local row count
     # a dead process sends nothing (its staged URLs are lost — the cost
     # of failure the paper's rebalancing bounds)
-    valid = (jnp.arange(S) < n) & state.shard_alive[shard]
+    staged = jnp.arange(S) < n
+    valid = staged & state.shard_alive[shard]
 
     # predict destination domain / shard (routing is the policy's call)
     pred = CLS.predict_domain(su, ss, cfg, step=state.step,
@@ -293,16 +352,30 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
     dest = ctx.policy.route(cfg, state, n_shards, su, pred, state.step)
 
     payload = jnp.stack([su, pred.astype(jnp.uint32),
-                         valid.astype(jnp.uint32)], axis=-1)  # (S, 3)
-    buckets, bmask, dropped = RT.pack_buckets(payload, dest, n_shards,
-                                              ctx.cap_ex, valid=valid)
+                         valid.astype(jnp.uint32),
+                         lax.bitcast_convert_type(sv, jnp.uint32)],
+                        axis=-1)                          # (S, 4)
+    buckets, bmask, dropped, sent = RT.pack_buckets(
+        payload, dest, n_shards, ctx.cap_ex, valid=valid, return_keep=True)
     delta = {"staging_drop": dropped, "dispatch_sent": valid.sum(),
              "dispatch_rounds": jnp.ones((), jnp.int32)}
 
-    recv = RT.exchange(buckets, ctx.axes)              # (n_shards, cap_ex, 3)
+    # value-channel conservation (sender half): anything staged but NOT sent
+    # (dead shard, bucket overflow) refunds its value to the source page's
+    # own row rather than vanishing with the URL
+    unsent = staged & ~sent
+    own_slot = state.slot_of_domain[jnp.clip(ss, 0, cfg.n_domains - 1)]
+    own_row = jnp.clip(own_slot - shard * r_slots, 0, r_slots - 1)
+    order_state = state.order_state.at[
+        jnp.where(unsent, own_row, r_slots), 0].add(
+        jnp.where(unsent, sv, 0.0), mode="drop")
+
+    recv = RT.exchange(buckets, ctx.axes)              # (n_shards, cap_ex, 4)
     r_u = recv[..., 0].reshape(-1)
     r_pred = recv[..., 1].reshape(-1).astype(jnp.int32)
-    r_m = recv[..., 2].reshape(-1) > 0
+    r_has = recv[..., 2].reshape(-1) > 0
+    r_val = lax.bitcast_convert_type(recv[..., 3], jnp.float32).reshape(-1)
+    r_m = r_has
     delta["dispatch_recv"] = r_m.sum()
 
     # exact dedup across everything received this round
@@ -311,9 +384,15 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
     delta["dedup_exact"] = before - r_m.sum()
 
     # local row for each received URL (the policy's placement decision)
-    r_slots = state.slot_domain.shape[0]               # local row count
     row, ok = ctx.policy.local_row(cfg, state, shard, r_slots, r_u, r_pred)
     r_m = r_m & ok
+
+    # value-channel conservation (receiver half): deliver every received
+    # URL's value to its row BEFORE dedup — the value (e.g. OPIC cash)
+    # accrues to the page whether or not the URL itself is fresh
+    order_state = order_state.at[
+        jnp.where(r_has, row, r_slots), 0].add(
+        jnp.where(r_has, r_val, 0.0), mode="drop")
 
     # bucket per local row, Bloom-dedup, insert into the frontier
     M = min(ctx.cap_ex * n_shards, cfg.frontier_capacity)
@@ -329,18 +408,39 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
     delta["dedup_bloom"] = (rbmask & seen).sum()
 
     fr = frontier_view(state)
-    scores = ctx.score_fn(rb, cfg)
+    scores = ctx.score_fn(rb, cfg, state)
     fr = F.insert(fr, rb, scores, fresh, n_buckets=cfg.n_priority_buckets)
 
     state = with_frontier(state, fr)._replace(
-        bloom_bits=bloom.bits,
+        bloom_bits=bloom.bits, order_state=order_state,
         staging_url=jnp.zeros_like(state.staging_url),
         staging_src=jnp.zeros_like(state.staging_src),
+        staging_val=jnp.zeros_like(state.staging_val),
         staging_n=jnp.zeros_like(state.staging_n))
     return state, carry, delta
 
 
 DEFAULT_PIPELINE: Tuple[Stage, ...] = (allocate, fetch_analyze, extract_stage)
+
+
+def assemble_pipeline(ctx: StageContext,
+                      extra_stages: Sequence[Stage] = ()) -> Tuple[Stage, ...]:
+    """Compose the per-step pipeline around the core three stages:
+
+        allocate -> [post_allocate extras] -> fetch_analyze
+                 -> [post_fetch extras] -> [ordering update] -> extract
+
+    ``extra_stages`` slot in by their ``placement`` attribute
+    (``"post_allocate"`` or the default ``"post_fetch"``) in given order;
+    the ordering policy's update stage (e.g. OPIC's cash distribution) runs
+    last before extract so the value channel is filled when links stage."""
+    post_alloc = [s for s in extra_stages
+                  if getattr(s, "placement", "post_fetch") == "post_allocate"]
+    post_fetch = [s for s in extra_stages
+                  if getattr(s, "placement", "post_fetch") != "post_allocate"]
+    upd = ctx.ordering.update_stage
+    return tuple([allocate, *post_alloc, fetch_analyze, *post_fetch,
+                  *([] if upd is None else [upd]), extract_stage])
 
 
 # ---------------------------------------------------------------------------
@@ -357,11 +457,12 @@ def make_politeness_stage(max_per_row: int) -> Stage:
         order = jnp.cumsum(carry.sel.astype(jnp.int32), axis=1) - 1
         over = carry.sel & (order >= max_per_row)
         fr = F.insert(frontier_view(state), carry.urls,
-                      ctx.score_fn(carry.urls, ctx.cfg), over,
+                      ctx.score_fn(carry.urls, ctx.cfg, state), over,
                       n_buckets=ctx.cfg.n_priority_buckets)
         return (with_frontier(state, fr), carry._replace(sel=carry.sel & ~over),
                 {"politeness_deferred": over.sum()})
 
+    politeness.placement = "post_allocate"
     return politeness
 
 
@@ -380,4 +481,5 @@ def make_revisit_stage(age_steps: int = 32) -> Stage:
         return (with_frontier(state, fr), carry,
                 {"revisit_enqueued": carry.sel.sum()})
 
+    revisit.placement = "post_fetch"
     return revisit

@@ -1,0 +1,41 @@
+"""Public jit'd wrapper for the opic_update (cash scatter-add) kernel.
+
+Dispatch goes through kernels/registry.py — this module only registers the
+implementations and exposes the jitted entry point. The wrapper pads the
+item axis up to a whole number of tiles (mask=False padding is a no-op for
+the scatter) so callers aren't bound by the kernel's ``N % tile == 0`` grid
+constraint.
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import registry
+from repro.kernels.opic_update.opic_update import opic_scatter_add
+from repro.kernels.opic_update.ref import opic_ref
+
+registry.register("opic_update", "ref", opic_ref, cpu_default=True)
+registry.register("opic_update", "pallas",
+                  partial(opic_scatter_add, interpret=False), tpu_default=True)
+registry.register("opic_update", "interpret",
+                  partial(opic_scatter_add, interpret=True))
+
+
+@partial(jax.jit, static_argnames=("impl", "tile"))
+def scatter_cash(cash, rows, contrib, mask, *, impl: str = "ref",
+                 tile: int = 256):
+    """cash (B, R) f32; rows/contrib/mask (B, N) -> cash' (B, R).
+
+    Masked contributions scatter-add at their row; out-of-range rows drop."""
+    N = rows.shape[1]
+    if N == 0:
+        return cash
+    tile = min(tile, N)
+    pad = -N % tile
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad)))
+        contrib = jnp.pad(contrib, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    return registry.dispatch("opic_update", impl, cash, rows, contrib, mask,
+                             tile=tile)

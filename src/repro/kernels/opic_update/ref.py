@@ -1,0 +1,26 @@
+"""Oracle for the opic_update kernel.
+
+Contract: contributions are processed in TILES of ``tile`` along the item
+axis, in ascending order; within a tile, one scatter-add applies all masked
+contributions (duplicate rows accumulate in item order). Mirroring the
+Pallas grid's tile walk keeps the f32 accumulation order identical, which is
+what makes ref <-> interpret bit-identity testable (same contract as
+kernels/bloom/ref.py).
+"""
+import jax.numpy as jnp
+
+
+def opic_ref(cash, rows, contrib, mask, *, tile=256):
+    """cash (B, R) f32; rows/contrib/mask (B, N). Returns cash' with masked
+    contributions scatter-added at their rows."""
+    B, R = cash.shape
+    N = rows.shape[1]
+    tile = min(tile, N)
+    b_idx = jnp.arange(B)[:, None]
+    for t0 in range(0, N, tile):
+        r = rows[:, t0:t0 + tile]
+        c = contrib[:, t0:t0 + tile]
+        m = mask[:, t0:t0 + tile]
+        cash = cash.at[b_idx, jnp.where(m, r, R)].add(
+            jnp.where(m, c, 0.0), mode="drop")
+    return cash

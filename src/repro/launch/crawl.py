@@ -28,11 +28,23 @@ def main(argv=None):
     ap.add_argument("--capacity", type=int, default=512)
     ap.add_argument("--fetch-batch", type=int, default=32)
     ap.add_argument("--dispatch-interval", type=int, default=4)
+    from repro.ordering import orderings
     ap.add_argument("--partitioning", default="webparf",
                     choices=list(PT.policies()))
+    ap.add_argument("--ordering", default="backlink",
+                    choices=list(orderings()),
+                    help="URL-ordering policy per partitioned queue "
+                         "(repro.ordering registry; opic = stateful "
+                         "importance estimation)")
+    ap.add_argument("--politeness", type=int, default=-1, metavar="N",
+                    help="cap fetches per domain queue per step at N "
+                         "(stages.make_politeness_stage)")
+    ap.add_argument("--revisit", type=int, default=-1, metavar="N",
+                    help="re-enqueue fetched URLs with an N-step-age "
+                         "freshness score (stages.make_revisit_stage)")
     ap.add_argument("--kernel-impl", default="auto",
                     choices=["auto", "ref", "pallas", "interpret"],
-                    help="frontier-select/bloom implementation "
+                    help="frontier-select/bloom/opic implementation "
                          "(kernels/registry.py; auto = Pallas on TPU)")
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "eager", "scan"],
@@ -48,12 +60,19 @@ def main(argv=None):
                  dispatch_interval=args.dispatch_interval,
                  bloom_bits_log2=16, dispatch_capacity=1024,
                  url_space_log2=24, partitioning=args.partitioning,
-                 kernel_impl=args.kernel_impl)
+                 ordering=args.ordering, kernel_impl=args.kernel_impl)
+    from repro.core import stages as ST
+    extra = []
+    if args.politeness >= 0:
+        extra.append(ST.make_politeness_stage(args.politeness))
+    if args.revisit >= 0:
+        extra.append(ST.make_revisit_stage(args.revisit))
     sess = CrawlSession(cfg, make_host_mesh(),
-                        classify_accuracy=args.classify_accuracy)
+                        classify_accuracy=args.classify_accuracy,
+                        extra_stages=extra)
     from repro.kernels import registry
     print(f"{args.partitioning}: {args.domains} domains over "
-          f"{sess.n_shards} shards (kernels: "
+          f"{sess.n_shards} shards, ordering={args.ordering} (kernels: "
           f"{registry.resolve_impl('frontier_select', cfg.kernel_impl)})")
 
     # C4 controls fire between run segments, at their exact step (fail
@@ -99,6 +118,13 @@ def main(argv=None):
           f" ({100 * ov['content_dup']:.2f}%)")
     print(f"C5 exchange: {sd['dispatch_rounds']} rounds, "
           f"{sd['dispatch_sent']} URLs sent")
+    from repro.ordering import ordering_quality
+    per_step = np.concatenate([r.per_step for r in reports])
+    oq = ordering_quality(urls, per_step, cfg)
+    print(f"ordering[{args.ordering}]: importance mass "
+          f"{oq['importance_mass']:.1f} over {oq['unique_pages']} unique "
+          f"pages ({oq['hot_pages']} hubs), coverage AUC "
+          f"{oq['coverage_auc']:.3f}")
     print("stats:", sd)
     return 0
 

@@ -1,0 +1,22 @@
+"""repro.ordering — the URL-ordering subsystem (DESIGN.md §12).
+
+The repo's third registry: ``CrawlConfig.ordering`` names an
+:class:`OrderingPolicy` the crawl stages resolve their ``score_fn`` (and,
+for stateful estimators like OPIC, their order_state + update stage)
+through. Importing this package registers the built-ins.
+"""
+from repro.ordering.policies import (ORD_WIDTH, OrderingPolicy, as_score_fn,
+                                     get_ordering, make_learned_ordering,
+                                     orderings, register_ordering)
+from repro.ordering import opic  # noqa: F401  (registers "opic")
+from repro.ordering.opic import total_cash, total_wealth
+from repro.ordering.quality import (coverage_curve, hot_page_recall,
+                                    ordering_quality, pooled_hot_set)
+
+__all__ = [
+    "ORD_WIDTH", "OrderingPolicy", "as_score_fn", "get_ordering",
+    "make_learned_ordering", "orderings", "register_ordering",
+    "total_cash", "total_wealth",
+    "coverage_curve", "hot_page_recall", "ordering_quality",
+    "pooled_hot_set",
+]

@@ -1,0 +1,148 @@
+"""OPIC — On-line Page Importance Computation (Abiteboul, Preda, Cobena),
+adapted to WebParF's domain-partitioned frontier.
+
+Classic OPIC keeps a (cash, history) pair per PAGE: fetching a page moves
+its cash into history and distributes it equally along its outlinks; a
+page's importance estimate is its accumulated history. A parallel crawler
+over 2^30 synthetic URLs cannot keep per-page state, so this estimator
+tracks the pair per frontier SLOT (one slot = one domain queue, the unit the
+allocator actually schedules): ``CrawlState.order_state[:, 0]`` is a slot's
+cash, ``[:, 1]`` its history. That granularity matches what the ordering
+needs — the global fetch budget in ``allocate`` picks WHICH domain queues
+get service, and within a queue the score's static-popularity component
+breaks ties.
+
+Lifecycle (DESIGN.md §12):
+  * init  — every domain-bearing slot starts with cash 1.0 (the uniform
+    distribution over partitions);
+  * spend — :func:`make_opic_update_stage`: a slot with fetches this step
+    banks its cash into history and splits it over the fetched pages'
+    outlinks (1/O each); LOCAL targets are scatter-added through the
+    ``opic_update`` kernel family (ref | pallas | interpret — registered in
+    kernels/registry.py, selected by ``cfg.kernel_impl``);
+  * travel — cash for CROSS-SHARD targets rides the stages' conserved value
+    channel: ``StepCarry.link_cash`` -> ``staging_val`` -> the 4th dispatch
+    payload lane -> delivered to the owner row (or refunded on any drop);
+  * survive — order_state is a CrawlState leaf, so it checkpoints with the
+    crawl and migrates on C4 rebalance (crawler.apply_rebalance scrubs the
+    stale duplicate rows migrate_rows leaves behind, keeping total cash
+    exactly conserved — tests/test_ordering.py asserts it).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import CrawlConfig
+from repro.core import partitioner as PT
+from repro.core import ranker
+from repro.core import webgraph as W
+from repro.ordering.policies import OrderingPolicy, register_ordering
+
+# score blend: learned importance of the URL's domain slot vs the static
+# within-domain popularity tie-break
+_W_IMP, _W_POP = 0.7, 0.3
+
+
+def init_opic(cfg: CrawlConfig, n_shards: int) -> jax.Array:
+    """Uniform initial cash over domain-bearing slots; empty history."""
+    dm = PT.identity_map(cfg, n_shards)
+    cash = (dm.domain_of_slot >= 0).astype(jnp.float32)
+    return jnp.stack([cash, jnp.zeros_like(cash)], axis=-1)
+
+
+def make_opic_score_fn(cfg: CrawlConfig, *, n_shards: int, axes):
+    r_slots = cfg.n_slots // n_shards
+
+    def score(urls, cfg, state):
+        shard = lax.axis_index(axes).astype(jnp.int32)
+        dom = W.domain_of(urls, cfg)
+        slot = state.slot_of_domain[jnp.clip(dom, 0, cfg.n_domains - 1)]
+        row = slot - shard * r_slots
+        local = (row >= 0) & (row < r_slots)
+        imp = state.order_state[:, 0] + state.order_state[:, 1]  # cash + hist
+        rel = imp / jnp.maximum(imp.max(), 1e-6)
+        s_imp = jnp.take(rel, jnp.clip(row, 0, r_slots - 1))
+        pop = W.popularity(urls, cfg)
+        # URLs whose domain row lives on another shard (rare under webparf
+        # partitioning) fall back to the static blend
+        s = jnp.where(local, _W_IMP * s_imp + _W_POP * pop,
+                      ranker.score_urls(urls, cfg))
+        return jnp.clip(s, 0.0, 0.999)
+
+    return score
+
+
+def make_opic_update_stage():
+    """The OPIC spend step, as a pipeline stage (between fetch_analyze and
+    extract — core/stages.assemble_pipeline slots it in automatically)."""
+
+    def opic_update(ctx, state, carry):
+        cfg = ctx.cfg
+        cash, hist = state.order_state[:, 0], state.order_state[:, 1]
+        r_slots = cash.shape[0]
+
+        # spend: a slot with fetches this step banks its cash into history
+        n_f = carry.sel.sum(axis=1)                                 # (r,)
+        spend = jnp.where(n_f > 0, cash, 0.0)
+        share = jnp.where(
+            carry.sel,
+            (spend / jnp.maximum(n_f, 1).astype(jnp.float32))[:, None],
+            0.0)                                                    # (r, k)
+        per_link = share[..., None] / cfg.outlinks_per_page         # (r, k, 1)
+
+        # distribute along the fetched pages' outlinks (parsed once here,
+        # cached into the carry so extract_stage reuses it)
+        links = W.outlinks(carry.urls, cfg, ctx.cumw)               # (r, k, O)
+        lmask = jnp.broadcast_to(carry.sel[..., None], links.shape)
+        contrib = jnp.broadcast_to(per_link, links.shape)
+        tslot = state.slot_of_domain[
+            jnp.clip(W.domain_of(links, cfg), 0, cfg.n_domains - 1)]
+        row = tslot - carry.shard * r_slots
+        is_local = (row >= 0) & (row < r_slots) & lmask
+
+        # local targets: the opic_update kernel's scatter-add
+        from repro.kernels.opic_update.ops import scatter_cash
+        cash = scatter_cash(
+            (cash - spend)[None],
+            jnp.clip(row, 0, r_slots - 1).reshape(1, -1),
+            contrib.reshape(1, -1), is_local.reshape(1, -1),
+            impl=ctx.impl)[0]
+
+        # cross-shard targets ride the conserved value channel (extract
+        # stages carry.link_cash into staging_val; dispatch delivers it)
+        remote = jnp.where(lmask & ~is_local, contrib, 0.0)
+
+        order = jnp.stack([cash, hist + spend], axis=-1)
+        return (state._replace(order_state=order),
+                carry._replace(link_cash=remote, links=links), {})
+
+    opic_update.placement = "post_fetch"
+    return opic_update
+
+
+OPIC = register_ordering(OrderingPolicy(
+    "opic", True, init_opic, make_opic_score_fn, make_opic_update_stage()))
+
+
+# ---------------------------------------------------------------------------
+# conservation accounting (host-side; the tests' oracle)
+# ---------------------------------------------------------------------------
+
+def total_cash(state) -> float:
+    """Total OPIC cash in the system: on-slot cash plus cash in transit in
+    the staging buffers. Conserved (up to f32 rounding in the spend split)
+    across steps, dispatches, checkpoints, and rebalances."""
+    cash = float(np.asarray(state.order_state[:, 0], np.float64).sum())
+    sv = np.asarray(state.staging_val, np.float64)
+    sn = np.asarray(state.staging_n)
+    staged = sum(sv[i, :int(n)].sum() for i, n in enumerate(sn))
+    return cash + float(staged)
+
+
+def total_wealth(state) -> float:
+    """cash + history + in-transit — grows only by banked history."""
+    return total_cash(state) + float(
+        np.asarray(state.order_state[:, 1], np.float64).sum())

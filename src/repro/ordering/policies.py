@@ -1,0 +1,164 @@
+"""URL-ORDERING POLICY REGISTRY — WebParF's second pillar made pluggable.
+
+The paper's Phase II orders "the URLs within each distributed set of URLs";
+this package owns that decision the same way kernels/registry.py owns kernel
+implementations and core/partitioner.py owns partitioning schemes — a third
+named-policy dispatch table, resolved from ``CrawlConfig.ordering``
+(DESIGN.md §12). The shipped policies span the axis surveyed in "URL
+ordering policies for distributed crawlers: a review" (Deepika & Dixit):
+
+  fifo      — pure arrival order (the breadth-first strawman): every URL
+              lands in one priority bucket, so Fig. 5's FIFO tie-break IS
+              the ordering.
+  backlink  — the static relevance blend core/ranker.py has always computed
+              (popularity + hub-ness [Cho et al. 1998]); the default, and
+              bit-identical to the pre-registry behavior.
+  opic      — On-line Page Importance Computation (Abiteboul et al.):
+              STATEFUL per-slot cash/history estimated *during* the crawl
+              (repro/ordering/opic.py; kernels/opic_update does the hot
+              scatter-add).
+  learned   — a deterministic linear probe over ranker.url_features — the
+              "bring a model" slot; :func:`make_learned_ordering` wraps a
+              trained scorer into a registrable policy.
+
+An :class:`OrderingPolicy` produces the crawl step's ``score_fn`` (now
+state-aware: ``score_fn(urls, cfg, state)``), the initial per-slot
+``CrawlState.order_state`` block, and optionally an update STAGE inserted
+into the pipeline (core/stages.assemble_pipeline) — so no ordering logic is
+hard-coded in core/stages.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CrawlConfig
+from repro.core import ranker
+
+# columns of CrawlState.order_state — fixed so the pytree structure (and
+# checkpoints) are stable across ordering policies; stateless policies carry
+# zeros. OPIC: col 0 = cash, col 1 = history.
+ORD_WIDTH = 2
+
+
+class OrderingPolicy(NamedTuple):
+    """One URL-ordering scheme, resolvable by name from ``cfg.ordering``.
+
+      stateful       — does the policy maintain per-slot ``order_state``?
+      init_state     — (cfg, n_shards) -> (n_slots, ORD_WIDTH) f32 initial
+                       ordering state (row-sharded with the frontier).
+      make_score_fn  — (cfg, *, n_shards, axes) -> score_fn(urls, cfg, state)
+                       mapping URLs to [0, 1) queue scores; traced inside the
+                       shard_mapped step, so it sees the LOCAL state block
+                       and may use ``lax.axis_index(axes)``.
+      update_stage   — optional pipeline stage (core/stages.Stage) that
+                       updates order_state from this step's fetches (runs
+                       between fetch_analyze and extract).
+    """
+    name: str
+    stateful: bool
+    init_state: Callable
+    make_score_fn: Callable
+    update_stage: Optional[Callable] = None
+
+
+_ORDERINGS: Dict[str, OrderingPolicy] = {}
+
+
+def register_ordering(policy: OrderingPolicy) -> OrderingPolicy:
+    """Register under ``policy.name`` (error on conflicting re-use)."""
+    if policy.name in _ORDERINGS and _ORDERINGS[policy.name] is not policy:
+        raise ValueError(f"ordering policy {policy.name!r} registered twice")
+    _ORDERINGS[policy.name] = policy
+    return policy
+
+
+def orderings() -> Tuple[str, ...]:
+    _ensure()
+    return tuple(sorted(_ORDERINGS))
+
+
+def get_ordering(name: str) -> OrderingPolicy:
+    """Resolve a ``cfg.ordering`` string to its registered policy."""
+    _ensure()
+    if name not in _ORDERINGS:
+        raise KeyError(f"unknown ordering policy {name!r}; "
+                       f"registered: {tuple(sorted(_ORDERINGS))}")
+    return _ORDERINGS[name]
+
+
+def _ensure() -> None:
+    """Built-in policies register at package import (repro/ordering/__init__
+    pulls in opic.py); callers that reach the registry through this module
+    alone trigger that import here."""
+    import repro.ordering  # noqa: F401  (registers opic)
+
+
+def as_score_fn(fn: Callable) -> Callable:
+    """Adapt a legacy stateless ``(urls, cfg)`` scorer — ranker.score_urls, a
+    learned scorer — to the state-aware ordering signature."""
+    def score(urls, cfg, state):
+        return fn(urls, cfg)
+    return score
+
+
+def zeros_state(cfg: CrawlConfig, n_shards: int) -> jax.Array:
+    """order_state for stateless policies (kept zero by the stages)."""
+    return jnp.zeros((cfg.n_slots, ORD_WIDTH), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# the stateless built-ins
+# ---------------------------------------------------------------------------
+
+def _backlink_score_fn(cfg, *, n_shards, axes):
+    return as_score_fn(ranker.score_urls)
+
+
+def _fifo_score_fn(cfg, *, n_shards, axes):
+    def score(urls, cfg, state):
+        # constant score -> every URL shares one priority bucket -> the
+        # frontier's FIFO tie-break is the whole ordering
+        return jnp.full(urls.shape, 0.5, jnp.float32)
+    return score
+
+
+# fixed weights over ranker.url_features (pop, hub, dom, 5 hash dims): a
+# deterministic stand-in for a trained ranker — heavy on popularity, a hub
+# bonus, and a small hash dither so equal-popularity URLs still spread
+# across buckets (what a real model's residual features would do)
+_LEARNED_W = (2.0, 0.8, 0.0, 0.25, 0.0, 0.0, 0.0, 0.0)
+_LEARNED_B = -1.0
+
+
+def _learned_score_fn(cfg, *, n_shards, axes):
+    w = jnp.asarray(_LEARNED_W, jnp.float32)
+
+    def score(urls, cfg, state):
+        feats = ranker.url_features(urls, cfg)             # (..., 8)
+        s = jax.nn.sigmoid(feats @ w + _LEARNED_B)
+        return jnp.clip(s, 0.0, 0.999)
+    return score
+
+
+def make_learned_ordering(apply_fn: Callable, params,
+                          name: str = "learned_custom") -> OrderingPolicy:
+    """Wrap a trained model (apply_fn(params, features) -> [0,1) scores) as a
+    registrable ordering policy — register_ordering() it, then select it by
+    name via ``CrawlConfig.ordering``."""
+    scorer = ranker.make_learned_scorer(apply_fn, params)
+
+    def make_score_fn(cfg, *, n_shards, axes):
+        return as_score_fn(scorer)
+
+    return OrderingPolicy(name, False, zeros_state, make_score_fn)
+
+
+FIFO = register_ordering(OrderingPolicy(
+    "fifo", False, zeros_state, _fifo_score_fn))
+BACKLINK = register_ordering(OrderingPolicy(
+    "backlink", False, zeros_state, _backlink_score_fn))
+LEARNED = register_ordering(OrderingPolicy(
+    "learned", False, zeros_state, _learned_score_fn))

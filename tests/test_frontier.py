@@ -99,6 +99,74 @@ def test_property_priority_monotone(n_hi, n_lo):
     assert got == list(range(100, 100 + n_hi)) + list(range(200, 200 + n_lo))
 
 
+def test_fifo_tiebreak_survives_arrival_saturation():
+    """Regression: the arrival counter used to clamp at _FIFO_RANGE - 1,
+    silently making same-bucket ordering arbitrary on long crawls. insert
+    now rebases the sequence (counted in n_rebased) so FIFO order holds
+    across the old saturation point."""
+    def ins(f, u):
+        return F.insert(f, jnp.asarray([[u]], jnp.uint32),
+                        jnp.full((1, 1), 0.5), jnp.ones((1, 1), bool),
+                        n_buckets=4)
+
+    f = mk(1, 8)
+    # a long crawl's counter, one insert away from the old clamp
+    f = f._replace(arrival=jnp.asarray([F._FIFO_RANGE - 1], jnp.int32))
+    f = ins(f, 1)
+    f = ins(f, 2)
+    got, _, mask, f = F.select(f, 1)         # pop 1 -> its slot frees up
+    assert int(np.asarray(got)[0, 0]) == 1
+    f = ins(f, 3)                            # lands in the freed slot 0
+    # pre-fix: 2 and 3 tie at the clamp and pop in SLOT order (3 before 2)
+    got, _, mask, f = F.select(f, 2)
+    assert mask.all()
+    assert list(np.asarray(got)[0]) == [2, 3]
+    assert int(f.n_rebased[0]) >= 1
+
+
+def test_fifo_rebase_not_pinned_by_long_lived_entry():
+    """A live low-bucket URL from arrival ~0 must not pin the rebase: rank
+    compaction restores headroom regardless, so later same-bucket inserts
+    still encode distinct priorities and pop in FIFO order."""
+    f = mk(1, 8)
+    # ancient low-bucket resident (arrival 0), counter about to saturate
+    f = F.insert(f, jnp.asarray([[99]], jnp.uint32), jnp.full((1, 1), 0.05),
+                 jnp.ones((1, 1), bool), n_buckets=4)
+    f = f._replace(arrival=jnp.asarray([F._FIFO_RANGE - 2], jnp.int32))
+    for u in (1, 2, 3):
+        f = F.insert(f, jnp.asarray([[u]], jnp.uint32),
+                     jnp.full((1, 1), 0.5), jnp.ones((1, 1), bool),
+                     n_buckets=4)
+    assert int(f.n_rebased[0]) >= 1
+    assert int(f.arrival[0]) < 64               # headroom actually restored
+    got, _, mask, _ = F.select(f, 4)
+    assert list(np.asarray(got)[0]) == [1, 2, 3, 99]   # FIFO kept, 99 last
+
+
+def test_fifo_rebase_no_op_on_short_crawls():
+    """Far from saturation the rebase must not fire (bit-stability of the
+    existing trajectories)."""
+    f = mk(2, 8)
+    urls = jnp.asarray([[1, 2], [3, 4]], jnp.uint32)
+    f = F.insert(f, urls, jnp.full((2, 2), 0.5), jnp.ones((2, 2), bool),
+                 n_buckets=4)
+    assert int(f.n_rebased.sum()) == 0
+
+
+def test_fifo_rebase_counter_drain_refill():
+    """Counter inflation via drops (arrival grows by the FULL batch, drops
+    included) still rebases cleanly: order stays FIFO per batch."""
+    f = mk(1, 4)
+    f = f._replace(arrival=jnp.asarray([F._FIFO_RANGE - 5], jnp.int32))
+    urls = jnp.arange(1, 9, dtype=jnp.uint32)[None]      # 8 into capacity 4
+    f = F.insert(f, urls, jnp.full((1, 8), 0.5), jnp.ones((1, 8), bool),
+                 n_buckets=4)
+    assert int(f.n_rebased[0]) == 1
+    assert int(f.arrival[0]) == 8                        # rebased to 0 + 8
+    got, _, mask, _ = F.select(f, 4)
+    assert list(np.asarray(got)[0]) == [1, 2, 3, 4]
+
+
 def test_multi_row_independence():
     f = mk(3, 8)
     urls = jnp.asarray([[1], [2], [3]], jnp.uint32)

@@ -1,0 +1,320 @@
+"""The URL-ordering subsystem (repro/ordering, DESIGN.md §12): registry
+resolution, every policy end-to-end through CrawlSession, opic_update kernel
+bit-identity (standalone + through the crawl step), OPIC cash conservation
+(steps / checkpoint / fail+heal rebalance), quality metrics, extra_stages
+wiring, and opic > fifo at an equal step budget."""
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import CrawlSession
+from repro.configs import get_reduced
+from repro.configs.base import scaled
+from repro.core import ranker
+from repro.core import stages as ST
+from repro.launch.mesh import make_host_mesh
+from repro.ordering import (ORD_WIDTH, OrderingPolicy, get_ordering,
+                            hot_page_recall, ordering_quality, orderings,
+                            pooled_hot_set, register_ordering, total_cash,
+                            total_wealth)
+from repro.ordering import policies as OP
+from repro.ordering.quality import coverage_curve
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_reduced("webparf")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+def assert_states_equal(a, b, msg=""):
+    for name, x, y in zip(ST.CrawlState._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{msg}: CrawlState.{name} diverged")
+
+
+# ---------------------------------------------------------------------------
+# registry resolution
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtin_policies():
+    assert set(orderings()) >= {"fifo", "backlink", "opic", "learned"}
+    assert get_ordering("opic").stateful
+    assert not get_ordering("fifo").stateful
+    assert get_ordering("opic").update_stage is not None
+    assert get_ordering("backlink").update_stage is None
+
+
+def test_registry_rejects_unknown_and_reuse():
+    with pytest.raises(KeyError, match="unknown ordering"):
+        get_ordering("pagerank")
+    with pytest.raises(ValueError, match="twice"):
+        register_ordering(OrderingPolicy("fifo", False, None, None))
+
+
+def test_custom_ordering_registers_and_runs(cfg, mesh):
+    custom = OrderingPolicy(
+        "test_reverse", False, OP.zeros_state,
+        lambda cfg, *, n_shards, axes:
+            lambda urls, cfg, state: jnp.full(urls.shape, 0.1, jnp.float32))
+    if "test_reverse" not in orderings():
+        register_ordering(custom)
+    try:
+        rep = CrawlSession(scaled(cfg, ordering="test_reverse"),
+                           mesh).run(cfg.dispatch_interval)
+        assert rep.fetched > 0
+    finally:
+        OP._ORDERINGS.pop("test_reverse", None)
+
+
+# ---------------------------------------------------------------------------
+# every policy end-to-end; backlink stays the pre-registry behavior
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["fifo", "backlink", "opic", "learned"])
+def test_policy_runs_end_to_end(cfg, mesh, name):
+    steps = 2 * cfg.dispatch_interval
+    rep = CrawlSession(scaled(cfg, ordering=name), mesh).run(steps)
+    assert rep.fetched > 0 and rep.steps == steps
+    assert rep.stats["dispatch_rounds"] >= 1
+    q = rep.ordering_quality
+    assert q["importance_mass"] > 0 and 0 < q["coverage_auc"] <= 1
+
+
+def test_backlink_equals_legacy_score_fn_override(cfg, mesh):
+    """The registry's default must be bit-identical to passing the legacy
+    ranker blend explicitly (the pre-subsystem behavior)."""
+    steps = 2 * cfg.dispatch_interval
+    a = CrawlSession(cfg, mesh)                         # ordering="backlink"
+    b = CrawlSession(cfg, mesh, score_fn=ranker.score_urls)
+    ra, rb = a.run(steps), b.run(steps)
+    np.testing.assert_array_equal(ra.urls, rb.urls)
+    assert_states_equal(a.state, b.state, "legacy override")
+
+
+def test_stateless_policies_keep_order_state_zero(cfg, mesh):
+    sess = CrawlSession(scaled(cfg, ordering="fifo"), mesh)
+    sess.run(2 * cfg.dispatch_interval)
+    assert sess.state.order_state.shape == (cfg.n_slots, ORD_WIDTH)
+    assert not np.asarray(sess.state.order_state).any()
+    assert not np.asarray(sess.state.staging_val).any()
+
+
+# ---------------------------------------------------------------------------
+# the opic_update kernel family
+# ---------------------------------------------------------------------------
+
+def test_opic_update_registered():
+    from repro.kernels import registry
+    assert set(registry.available("opic_update")) == \
+        {"ref", "pallas", "interpret"}
+    assert registry.resolve_impl("opic_update", "auto") in ("ref", "pallas")
+
+
+@pytest.mark.parametrize("shape", [(1, 16, 640), (3, 64, 1000), (1, 8, 37)])
+def test_opic_update_ref_interpret_bit_identical(shape):
+    """ref and interpret must agree BIT-FOR-BIT (f32 accumulation order is
+    part of the kernel contract), including masked lanes, out-of-range rows,
+    and the non-multiple-of-tile padding path."""
+    from repro.kernels.opic_update.ops import scatter_cash
+    B, R, N = shape
+    rng = np.random.default_rng(7)
+    cash = jnp.asarray(rng.random((B, R)), jnp.float32)
+    rows = jnp.asarray(rng.integers(0, R + 4, (B, N)), jnp.int32)
+    contrib = jnp.asarray(rng.random((B, N)) * 0.1, jnp.float32)
+    mask = jnp.asarray(rng.random((B, N)) < 0.8)
+    a = scatter_cash(cash, rows, contrib, mask, impl="ref")
+    b = scatter_cash(cash, rows, contrib, mask, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # masked-out + out-of-range contributions really dropped
+    keep = np.asarray(mask) & (np.asarray(rows) < R)
+    total = np.asarray(cash, np.float64).sum() + \
+        np.asarray(contrib, np.float64)[keep].sum()
+    np.testing.assert_allclose(np.asarray(a, np.float64).sum(), total,
+                               rtol=1e-5)
+
+
+def test_opic_trajectory_ref_interpret_bit_identical(cfg, mesh):
+    """kernel_impl="interpret" must reproduce the "ref" OPIC crawl trajectory
+    bit-identically — the opic_update kernel runs inside every step here."""
+    steps = 2 * cfg.dispatch_interval
+    out = {}
+    for impl in ("ref", "interpret"):
+        c = scaled(cfg, ordering="opic", kernel_impl=impl)
+        sess = CrawlSession(c, mesh)
+        rep = sess.run(steps, mode="eager")
+        out[impl] = (sess.state, rep)
+    assert_states_equal(out["ref"][0], out["interpret"][0], "opic impl")
+    np.testing.assert_array_equal(out["ref"][1].urls,
+                                  out["interpret"][1].urls)
+
+
+# ---------------------------------------------------------------------------
+# OPIC cash conservation
+# ---------------------------------------------------------------------------
+
+def test_opic_cash_conserved_across_steps(cfg, mesh):
+    sess = CrawlSession(scaled(cfg, ordering="opic"), mesh)
+    c0 = total_cash(sess.state)
+    assert c0 == float(cfg.n_domains)        # uniform unit cash per domain
+    sess.run(3 * cfg.dispatch_interval)
+    np.testing.assert_allclose(total_cash(sess.state), c0, rtol=1e-5)
+    # wealth = cash + banked history; history only grows
+    assert total_wealth(sess.state) > c0
+    assert np.asarray(sess.state.order_state[:, 1]).min() >= 0
+
+
+def test_opic_state_survives_checkpoint_restore(cfg, mesh, tmp_path):
+    sess = CrawlSession(scaled(cfg, ordering="opic"), mesh)
+    sess.run(cfg.dispatch_interval + 1)      # mid-interval: staged cash too
+    sess.checkpoint(str(tmp_path))
+    twin = CrawlSession(scaled(cfg, ordering="opic"), mesh)
+    twin.restore(str(tmp_path))
+    assert_states_equal(twin.state, sess.state, "restored opic")
+    assert total_cash(twin.state) == total_cash(sess.state)
+    ra = sess.run(cfg.dispatch_interval)
+    rb = twin.run(cfg.dispatch_interval)
+    np.testing.assert_array_equal(ra.urls, rb.urls)
+
+
+OPIC_FAIL_HEAL = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.api import CrawlSession
+    from repro.configs import get_reduced
+    from repro.configs.base import scaled
+    from repro.ordering import total_cash
+
+    cfg = scaled(get_reduced("webparf"), ordering="opic")
+    sess = CrawlSession(cfg)
+    iv = cfg.dispatch_interval
+    c0 = total_cash(sess.state)
+    sess.run(iv)
+    sess.inject_failure(1)
+    sess.run(iv)                     # dead shard refunds its staged cash
+    c_dead = total_cash(sess.state)
+    sess.heal()                      # rows migrate; stale duplicates scrubbed
+    c_heal = total_cash(sess.state)
+    sess.run(iv)
+    c_end = total_cash(sess.state)
+    for name, c in [("dead", c_dead), ("heal", c_heal), ("end", c_end)]:
+        np.testing.assert_allclose(c, c0, rtol=1e-5,
+                                   err_msg=f"cash lost at {name}")
+    # the healed layout still owns every unit of cash on mapped slots
+    owned = np.asarray(sess.state.slot_domain) >= 0
+    stray = np.abs(np.asarray(sess.state.order_state)[~owned]).sum()
+    assert stray == 0.0, f"cash stranded on unmapped slots: {stray}"
+    print("opic fail/heal conservation: OK")
+""")
+
+
+@pytest.mark.slow
+def test_opic_conservation_through_fail_heal_multi_shard():
+    r = subprocess.run([sys.executable, "-c", OPIC_FAIL_HEAL],
+                       capture_output=True, text=True, timeout=900, cwd=".")
+    if r.returncode != 0:
+        raise AssertionError(f"STDOUT:\n{r.stdout[-3000:]}\n"
+                             f"STDERR:\n{r.stderr[-3000:]}")
+    assert "opic fail/heal conservation: OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# quality metrics + the paper-facing claim: opic beats fifo at equal budget
+# ---------------------------------------------------------------------------
+
+def test_coverage_curve_monotone_and_consistent(cfg, mesh):
+    rep = CrawlSession(cfg, mesh).run(2 * cfg.dispatch_interval)
+    curve = coverage_curve(rep.urls, rep.per_step, cfg)
+    assert len(curve) == rep.steps
+    assert (np.diff(curve) >= 0).all()
+    q = ordering_quality(rep.urls, rep.per_step, cfg)
+    np.testing.assert_allclose(curve[-1], q["importance_mass"])
+    assert q["unique_pages"] <= rep.fetched
+
+
+def test_pooled_hot_set_and_recall(cfg, mesh):
+    rep = CrawlSession(cfg, mesh).run(2 * cfg.dispatch_interval)
+    hot = pooled_hot_set([rep.urls], cfg)
+    assert hot_page_recall(rep.urls, cfg, hot) == 1.0    # pool member
+    assert hot_page_recall(np.array([], np.uint32), cfg, hot) == \
+        (0.0 if len(hot) else 1.0)
+    assert hot_page_recall(rep.urls, cfg, None) == 1.0   # nothing to miss
+
+
+@pytest.mark.slow
+def test_opic_beats_fifo_at_equal_budget():
+    """The subsystem's reason to exist: online importance estimation must
+    capture more importance than arrival order at the same step budget
+    (benchmarks/ordering.py reports the full race)."""
+    from repro.configs import get_arch
+    base = scaled(get_arch("webparf")[0], n_domains=16, frontier_capacity=256,
+                  fetch_batch=16, outlinks_per_page=8, bloom_bits_log2=14,
+                  dispatch_capacity=512, url_space_log2=20,
+                  seed_urls_per_domain=8)
+    mass = {}
+    for name in ("fifo", "opic"):
+        rep = CrawlSession(scaled(base, ordering=name)).run(16)
+        mass[name] = rep.ordering_quality["importance_mass"]
+    assert mass["opic"] > mass["fifo"], mass
+
+
+# ---------------------------------------------------------------------------
+# extra_stages wiring (satellite: scenario stages on the driver surface)
+# ---------------------------------------------------------------------------
+
+def test_extra_stages_politeness_via_session(cfg, mesh):
+    sess = CrawlSession(cfg, mesh,
+                        extra_stages=[ST.make_politeness_stage(0)])
+    rep = sess.run(2)
+    assert rep.fetched == 0                      # budget 0 defers every pop
+    assert sess.stats["politeness_deferred"] > 0
+
+
+def test_extra_stages_revisit_via_session(cfg, mesh):
+    sess = CrawlSession(cfg, mesh,
+                        extra_stages=[ST.make_revisit_stage(8)])
+    rep = sess.run(2)
+    assert rep.fetched > 0
+    assert sess.stats["revisit_enqueued"] == rep.fetched
+
+
+def test_assemble_pipeline_placement(cfg):
+    ctx = ST.make_context(cfg, n_shards=1, axes=("data",),
+                          classify_accuracy=0.9)
+    pol = ST.make_politeness_stage(1)
+    rev = ST.make_revisit_stage(8)
+    pipe = ST.assemble_pipeline(ctx, [rev, pol])
+    order = [getattr(s, "__name__", "?") for s in pipe]
+    assert order == ["allocate", "politeness", "fetch_analyze", "revisit",
+                     "extract_stage"]
+    # a stateful ordering slots its update stage before extract
+    ctx_opic = ST.make_context(scaled(cfg, ordering="opic"), n_shards=1,
+                               axes=("data",), classify_accuracy=0.9)
+    names = [getattr(s, "__name__", "?")
+             for s in ST.assemble_pipeline(ctx_opic)]
+    assert names == ["allocate", "fetch_analyze", "opic_update",
+                     "extract_stage"]
+
+
+def test_extra_stages_scan_matches_eager(cfg, mesh):
+    """extra stages must survive the fused-scan path bit-identically."""
+    steps = 2 * cfg.dispatch_interval
+    kw = dict(extra_stages=[ST.make_politeness_stage(2)])
+    a = CrawlSession(scaled(cfg, ordering="opic"), mesh, **kw)
+    b = CrawlSession(scaled(cfg, ordering="opic"), mesh, **kw)
+    ra = a.run(steps, mode="scan")
+    rb = b.run(steps, mode="eager")
+    np.testing.assert_array_equal(ra.urls, rb.urls)
+    assert_states_equal(a.state, b.state, "scan vs eager with extras")

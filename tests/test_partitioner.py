@@ -1,0 +1,126 @@
+"""Partitioner control-plane edges: multi-shard-failure rebalance,
+migrate_rows round-trips, and the registries' unknown-name error paths."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core import partitioner as PT
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_reduced("webparf")        # 8 domains, slot_factor 2
+
+
+N_SHARDS = 4
+
+
+def shard_of_domain(dm, cfg):
+    slots = np.asarray(dm.slot_of_domain)
+    return slots // (cfg.n_slots // N_SHARDS)
+
+
+# ---------------------------------------------------------------------------
+# rebalance with multiple simultaneous dead shards
+# ---------------------------------------------------------------------------
+
+def test_rebalance_multiple_dead_shards(cfg):
+    dm = PT.identity_map(cfg, N_SHARDS)
+    dm2 = PT.rebalance(dm, [1, 2])
+    alive = np.asarray(dm2.shard_alive)
+    assert list(alive) == [True, False, False, True]
+
+    # every domain still has exactly one home, none on a dead shard
+    slots = np.asarray(dm2.slot_of_domain)
+    doms = np.asarray(dm2.domain_of_slot)
+    assert len(np.unique(slots)) == cfg.n_domains        # no merges needed
+    for d in range(cfg.n_domains):
+        assert doms[slots[d]] == d
+    owners = shard_of_domain(dm2, cfg)
+    assert set(owners) <= {0, 3}
+
+    # load-balanced: survivors split the orphans evenly
+    counts = np.bincount(owners, minlength=N_SHARDS)
+    assert counts[1] == counts[2] == 0
+    assert abs(int(counts[0]) - int(counts[3])) <= 1
+
+
+def test_rebalance_all_but_one_dead(cfg):
+    dm = PT.identity_map(cfg, N_SHARDS)
+    dm2 = PT.rebalance(dm, [0, 1, 3])
+    assert set(shard_of_domain(dm2, cfg)) == {2}
+    with pytest.raises(ValueError, match="no live shards"):
+        PT.rebalance(dm2, [2])
+
+
+def test_rebalance_respects_load(cfg):
+    """The least-loaded survivor takes the orphans first."""
+    dm = PT.identity_map(cfg, N_SHARDS)
+    loads = np.array([100.0, 0.0, 0.0, 0.0])
+    dm2 = PT.rebalance(dm, [1], loads=loads)
+    owners = shard_of_domain(dm2, cfg)
+    per_dom = cfg.n_domains // N_SHARDS
+    orphans = owners[1 * per_dom:(1 + 1) * per_dom]
+    assert 0 not in orphans                  # heavy shard skipped
+    assert set(orphans) <= {2, 3}
+
+
+# ---------------------------------------------------------------------------
+# migrate_rows round-trip
+# ---------------------------------------------------------------------------
+
+def test_migrate_rows_out_and_back_is_identity(cfg):
+    rng = np.random.default_rng(11)
+    dm = PT.identity_map(cfg, N_SHARDS)
+    dm2 = PT.rebalance(dm, [2])
+    arrs = dict(
+        a=jnp.asarray(rng.random((cfg.n_slots, 5)), jnp.float32),
+        b=jnp.asarray(rng.integers(0, 99, (cfg.n_slots,)), jnp.int32),
+        scalar=jnp.asarray(3),               # non-row leaves pass through
+    )
+    out = PT.migrate_rows(arrs, dm, dm2)
+    back = PT.migrate_rows(out, dm2, dm)
+    # every domain-bearing row returns to its original slot bit-for-bit
+    # (unmapped spare slots may hold stale copies — they carry no queue)
+    for d in range(cfg.n_domains):
+        s = int(np.asarray(dm.slot_of_domain)[d])
+        for k in ("a", "b"):
+            np.testing.assert_array_equal(np.asarray(back[k][s]),
+                                          np.asarray(arrs[k][s]),
+                                          err_msg=f"domain {d} leaf {k}")
+    assert int(back["scalar"]) == 3
+
+
+def test_migrate_rows_moves_dead_rows_to_new_owner(cfg):
+    dm = PT.identity_map(cfg, N_SHARDS)
+    dm2 = PT.rebalance(dm, [1])
+    marker = jnp.arange(cfg.n_slots, dtype=jnp.int32)    # row id payload
+    out = PT.migrate_rows(dict(m=marker), dm, dm2)["m"]
+    for d in range(cfg.n_domains):
+        old = int(np.asarray(dm.slot_of_domain)[d])
+        new = int(np.asarray(dm2.slot_of_domain)[d])
+        assert int(np.asarray(out)[new]) == old          # row followed domain
+
+
+# ---------------------------------------------------------------------------
+# unknown-name error paths of the three registries
+# ---------------------------------------------------------------------------
+
+def test_partition_policy_unknown_errors():
+    with pytest.raises(KeyError, match="unknown partitioning"):
+        PT.get_policy("geographic")
+
+
+def test_kernel_registry_unknown_errors():
+    from repro.kernels import registry
+    with pytest.raises(KeyError, match="unknown kernel"):
+        registry.resolve_impl("no_such_kernel", "auto")
+    with pytest.raises(ValueError, match="no impl"):
+        registry.resolve_impl("opic_update", "cuda")
+
+
+def test_ordering_registry_unknown_errors():
+    from repro.ordering import get_ordering
+    with pytest.raises(KeyError, match="unknown ordering"):
+        get_ordering("bfs")

@@ -65,7 +65,7 @@ def test_run_returns_typed_report(cfg, mesh):
     assert rep.steps == steps and len(rep.per_step) == steps
     assert rep.fetched == int(rep.per_step.sum()) == len(rep.urls) > 0
     assert rep.stats["fetched"] == rep.fetched
-    assert set(rep.stats) == set(ST.STATS)
+    assert set(rep.stats) == set(ST.STATS) | {"fifo_rebase"}
     assert rep.overlap is not None and rep.overlap["fetched"] == rep.fetched
     assert rep.seconds > 0 and rep.pages_per_sec > 0
     assert "pages" in rep.summary()
