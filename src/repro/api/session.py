@@ -94,6 +94,16 @@ class CrawlSession:
     def stats(self) -> Dict[str, int]:
         return stats_dict(self.state)
 
+    def reset(self) -> "CrawlSession":
+        """Fresh crawl state + step counter 0, REUSING the compiled step
+        functions — cheap repeated trajectories for sweeps and property
+        tests (tests/test_invariants.py drives hundreds of schedules
+        through one session per config)."""
+        from repro.core.stages import init_state
+        self.state = init_state(self.cfg, self.n_shards)
+        self._t = 0
+        return self
+
     # -- the two execution paths -------------------------------------------
 
     def step(self) -> FetchReport:

@@ -208,15 +208,21 @@ class CrawlConfig:
     dispatch_interval: int = 4        # steps between batched URL exchanges (C5)
     dispatch_capacity: int = 2048     # max URLs exchanged per shard per dispatch
     topical_locality: float = 0.8     # P(outlink stays in-domain) — paper's premise
+    link_pop_bias: float = 0.0        # preferential attachment: P(an outlink's
+                                      # local target is tournament-picked by
+                                      # popularity); 0 = uniform targets (the
+                                      # historical web, bit-for-bit)
     alias_fraction: float = 0.05      # URLs that alias another page's content (C2)
     url_space_log2: int = 30          # 2^30 synthetic URL ids
     seed_urls_per_domain: int = 32    # Phase I hub seeds per domain pool
     zipf_a: float = 1.1               # domain-size skew
     partitioning: str = "webparf"     # "webparf" | "url_hash" | "random" (baselines)
     ordering: str = "backlink"        # URL-ordering policy per partitioned queue:
-                                      # "fifo" | "backlink" | "opic" | "learned"
+                                      # "fifo" | "backlink" | "opic" |
+                                      # "opic_url" | "learned"
                                       # (repro.ordering registry; backlink = the
-                                      # ranker's static linear blend)
+                                      # ranker's static linear blend; opic_url =
+                                      # per-URL cash over the frontier columns)
     slot_factor: int = 2              # frontier rows per domain (spare slots so
                                       # C4 rebalancing never merges queues)
     kernel_impl: str = "auto"         # frontier-select/bloom implementation:

@@ -134,6 +134,32 @@ def apply_rebalance(state: CrawlState, cfg: CrawlConfig,
     dup = ((new_dm.domain_of_slot < 0) & (old_dom >= 0) &
            (new_dm.slot_of_domain[jnp.clip(old_dom, 0)] != slots))
     moved["order_state"] = jnp.where(dup[:, None], 0.0, moved["order_state"])
+    # the gather's other hazard: a migration TARGET slot OVERWRITES whatever
+    # row sat there. Under webparf those spare rows are structurally empty,
+    # but url_hash routing populates every row — destroying the displaced
+    # row would leak its cash (slot col 0 + the opic_url URL lane, cols
+    # ORD_WIDTH:), so refund it into the incoming row's slot pool
+    # (tests/test_invariants.py caught exactly this under url_hash heal).
+    from repro.ordering.policies import ORD_WIDTH
+    src = jnp.where(new_dm.domain_of_slot >= 0,
+                    old_dm.slot_of_domain[jnp.clip(new_dm.domain_of_slot, 0)],
+                    slots)
+    displaced = src != slots
+    old_os = state.order_state
+    refund = jnp.where(displaced,
+                       old_os[:, 0] + old_os[:, ORD_WIDTH:].sum(axis=1), 0.0)
+    moved["order_state"] = moved["order_state"].at[:, 0].add(refund)
+    # rebalance's MERGE fallback (no free slot anywhere): the domain maps
+    # into an OCCUPIED slot, so no new slot claims it, migrate_rows never
+    # copies its row, and the dup scrub above would destroy the ONLY copy
+    # of its cash. Refund it into the sharing slot's pool instead.
+    tgt = new_dm.slot_of_domain[jnp.clip(old_dom, 0)]
+    merged = dup & (new_dm.domain_of_slot[tgt] != old_dom)
+    merge_cash = jnp.where(
+        merged, old_os[:, 0] + old_os[:, ORD_WIDTH:].sum(axis=1), 0.0)
+    moved["order_state"] = moved["order_state"].at[
+        jnp.where(merged, tgt, slots.shape[0]), 0].add(
+        merge_cash, mode="drop")
     return state._replace(
         **moved, slot_domain=new_dm.domain_of_slot,
         slot_of_domain=new_dm.slot_of_domain, shard_alive=new_dm.shard_alive)

@@ -127,14 +127,13 @@ def select(f: Frontier, k: int, *, impl: str = "ref"
     return got, pri, mask, f._replace(valid=new_valid, priority=new_pri)
 
 
-def insert(f: Frontier, urls: jax.Array, scores: jax.Array,
-           mask: jax.Array, *, n_buckets: int) -> Frontier:
-    """Insert up to M URLs per row into free slots (dispatcher's write).
-
-    urls/scores/mask: (R, M). Items beyond the row's free capacity are
-    dropped and counted (bounded queues — DESIGN.md §2)."""
+def _plan_insert(f: Frontier, urls: jax.Array, scores: jax.Array,
+                 mask: jax.Array, *, n_buckets: int):
+    """Shared insert core: FIFO rebase, priority encoding, and free-slot
+    targeting. Returns (rebased frontier, pri, fits, tgt_safe, incoming)
+    where ``tgt_safe`` (R, M) is each item's destination column (C for
+    dropped items — the trash column)."""
     R, C = f.url.shape
-    M = urls.shape[1]
     incoming = mask.sum(axis=1).astype(jnp.int32)                   # (R,)
     f = _rebase_fifo(f, incoming)
     # FIFO arrival sequence for the incoming batch
@@ -160,6 +159,14 @@ def insert(f: Frontier, urls: jax.Array, scores: jax.Array,
     # collide with a legitimate write — duplicate-index scatter order is
     # undefined in XLA, so collisions must be structurally impossible
     tgt_safe = jnp.where(fits, tgt, C)
+    return f, pri, fits, tgt_safe, incoming
+
+
+def _apply_insert(f: Frontier, urls: jax.Array, pri: jax.Array,
+                  mask: jax.Array, fits: jax.Array, tgt_safe: jax.Array,
+                  incoming: jax.Array) -> Frontier:
+    R, C = f.url.shape
+    rows = jnp.arange(R)[:, None]
 
     def put(arr, vals, fill):
         ext = jnp.concatenate(
@@ -177,6 +184,52 @@ def insert(f: Frontier, urls: jax.Array, scores: jax.Array,
         n_inserted=f.n_inserted + fits.sum(axis=1).astype(jnp.int32),
         n_rebased=f.n_rebased,
     )
+
+
+def insert(f: Frontier, urls: jax.Array, scores: jax.Array,
+           mask: jax.Array, *, n_buckets: int) -> Frontier:
+    """Insert up to M URLs per row into free slots (dispatcher's write).
+
+    urls/scores/mask: (R, M). Items beyond the row's free capacity are
+    dropped and counted (bounded queues — DESIGN.md §2)."""
+    f, pri, fits, tgt_safe, incoming = _plan_insert(
+        f, urls, scores, mask, n_buckets=n_buckets)
+    return _apply_insert(f, urls, pri, mask, fits, tgt_safe, incoming)
+
+
+def insert_valued(f: Frontier, table: jax.Array, urls: jax.Array,
+                  scores: jax.Array, mask: jax.Array, values: jax.Array,
+                  *, n_buckets: int, impl: str = "ref"
+                  ) -> Tuple[Frontier, jax.Array, jax.Array]:
+    """Value-carrying insert: each inserted URL's ``values`` entry lands in
+    ``table`` (R, C) at the SAME cell the URL occupies in the frontier — the
+    per-URL cash lane of the ``opic_url`` ordering (DESIGN.md §13). The cell
+    write goes through the ``opic_update`` kernel family's cell scatter
+    (``impl`` selects ref | pallas | interpret). Dropped items REFUND their
+    value per row instead of losing it (the lane's bounded-memory rule).
+
+    Returns (frontier', table', refund (R,))."""
+    R, C = f.url.shape
+    f2, pri, fits, tgt_safe, incoming = _plan_insert(
+        f, urls, scores, mask, n_buckets=n_buckets)
+    out = _apply_insert(f2, urls, pri, mask, fits, tgt_safe, incoming)
+    from repro.kernels.opic_update.ops import scatter_cash_cells
+    rows = jnp.broadcast_to(jnp.arange(R, dtype=jnp.int32)[:, None],
+                            tgt_safe.shape)
+    table2 = scatter_cash_cells(table, rows, tgt_safe, values, fits,
+                                impl=impl)
+    refund = jnp.where(mask & ~fits, values, 0.0).sum(axis=1)
+    return out, table2, refund
+
+
+def rescore(f: Frontier, scores: jax.Array, *, n_buckets: int) -> Frontier:
+    """Re-bucket every queued URL from fresh ``scores`` (R, C), preserving
+    each URL's FIFO arrival stamp — the periodic queue re-prioritization a
+    stateful ordering needs once importance estimates move after insert
+    (opic_url runs this at every dispatch). Invalid cells keep NEG."""
+    arr = _decode_arrival(f.priority)          # exact for valid cells
+    pri = encode_priority(scores, arr, n_buckets)
+    return f._replace(priority=jnp.where(f.valid, pri, f.priority))
 
 
 def occupancy(f: Frontier) -> jax.Array:

@@ -29,11 +29,19 @@ URL ordering is the third registry (repro/ordering, DESIGN.md §12):
 ``ctx.score_fn`` is produced by the ordering policy named in
 ``CrawlConfig.ordering`` and is state-aware — ``score_fn(urls, cfg, state)``
 — so stateful estimators (OPIC) can rank by importance learned during the
-crawl. The stages themselves carry no ordering logic; they provide one
-generic mechanism the policies build on: a per-URL float VALUE CHANNEL
-(``StepCarry.link_cash`` -> ``staging_val`` -> a 4th dispatch payload lane)
-that is conserved end to end — every value is either delivered to its owner
-row's ``order_state`` or refunded to its source row, never dropped.
+crawl. The stages themselves carry no ordering logic; they provide two
+generic mechanisms the policies build on (DESIGN.md §13):
+
+  * a per-URL float VALUE CHANNEL (``StepCarry.link_cash`` ->
+    ``staging_val`` -> a 4th dispatch payload lane) conserved end to end —
+    every value is either delivered or refunded, never dropped;
+  * a per-URL VALUE LANE over the frontier columns, for policies with
+    ``OrderingPolicy.url_lane`` set (opic_url): ``order_state[:, 2:]`` is
+    cell-aligned with the frontier queues. ``allocate`` harvests a popped
+    URL's cell into ``StepCarry.url_cash``; give-backs travel with their
+    value (``frontier.insert_valued``); ``dispatch_exchange`` delivers a
+    received value into the exact cell its URL wins, refunding duplicates
+    and overflow to the receiving row's slot cash (column 0).
 """
 from __future__ import annotations
 
@@ -45,6 +53,9 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import CrawlConfig
+# ORD_URL0 = first column of the per-URL value lane in order_state (the
+# slot-level columns come first); repro.ordering.policies owns the layout
+from repro.ordering.policies import ORD_URL0
 from repro.core import classifier as CLS
 from repro.core import dedup as DD
 from repro.core import freshness as FR
@@ -104,6 +115,9 @@ class StageContext(NamedTuple):
     impl: str                    # kernel impl knob ("ref"|"pallas"|...)
     policy: PT.PartitionPolicy   # resolved from cfg.partitioning (registry)
     ordering: "object"           # resolved from cfg.ordering (repro.ordering)
+    url_lane: bool = False       # ordering keeps a frontier-cell-aligned
+                                 # per-URL value lane in order_state[:, 2:]
+                                 # (OrderingPolicy.url_lane — opic_url)
 
 
 class StepCarry(NamedTuple):
@@ -120,6 +134,10 @@ class StepCarry(NamedTuple):
                                  # (r, k, O) cached outlink parse — a stage
                                  # that parses (e.g. OPIC's update) stores it
                                  # so extract_stage doesn't re-parse
+    url_cash: Optional[jax.Array] = None
+                                 # (r, k) cash harvested from the popped
+                                 # URLs' frontier cells (url_lane orderings
+                                 # only; None otherwise)
 
 
 class FetchReport(NamedTuple):
@@ -145,6 +163,15 @@ def with_frontier(s: CrawlState, f: F.Frontier) -> CrawlState:
     return s._replace(f_url=f.url, f_pri=f.priority, f_valid=f.valid,
                       f_arrival=f.arrival, f_dropped=f.n_dropped,
                       f_inserted=f.n_inserted, f_rebased=f.n_rebased)
+
+
+def _with_lane(order_state: jax.Array, table: jax.Array,
+               refund: Optional[jax.Array] = None) -> jax.Array:
+    """Reassemble order_state from its slot columns + a new URL lane,
+    optionally folding a per-row slot-cash refund into column 0 (column
+    layout owned by repro/ordering/policies.py: ORD_URL0)."""
+    out = jnp.concatenate([order_state[:, :ORD_URL0], table], axis=1)
+    return out if refund is None else out.at[:, 0].add(refund)
 
 
 def apply_delta(state: CrawlState, delta: StatsDelta) -> CrawlState:
@@ -216,7 +243,8 @@ def make_context(cfg: CrawlConfig, *, n_shards: int, axes,
         classify_accuracy=classify_accuracy, cumw=W.zipf_cumweights(cfg),
         k_row=max(1, cfg.fetch_batch // r_local), S=S,
         cap_ex=max(8, -(-S // n_shards) * 2), impl=cfg.kernel_impl,
-        policy=PT.get_policy(cfg.partitioning), ordering=ordering)
+        policy=PT.get_policy(cfg.partitioning), ordering=ordering,
+        url_lane=bool(getattr(ordering, "url_lane", False)))
 
 
 # ---------------------------------------------------------------------------
@@ -236,8 +264,38 @@ def allocate(ctx: StageContext, state: CrawlState,
     alive = state.shard_alive[shard]
     fr = frontier_view(state)
 
+    if ctx.url_lane:
+        # per-URL cash lane: resolve the cells the select is ABOUT to pop.
+        # Priorities are unique per row among valid cells (encode_priority's
+        # strictly-increasing arrival counter + the FIFO rebase), so this
+        # top_k resolves the same cells every select implementation pops.
+        idx = lax.top_k(jnp.where(fr.valid, fr.priority, F.NEG), ctx.k_row)[1]
+
     urls, pri, pre_sel, fr = F.select(fr, ctx.k_row, impl=ctx.impl)
     r_local = urls.shape[0]
+
+    url_cash, table, order_state = None, None, state.order_state
+    if ctx.url_lane:
+        table = order_state[:, ORD_URL0:]
+        url_cash = jnp.where(pre_sel,
+                             jnp.take_along_axis(table, idx, axis=1), 0.0)
+        # popped cells zero out (invalid cells already hold exactly 0)
+        table = jnp.where(fr.valid, table, 0.0)
+
+    def give_back(fr, table, order_state, url_cash, mask):
+        """Return popped URLs (and, on the url lane, their cash) to the
+        frontier; insert-overflow refunds to the row's slot cash."""
+        if not ctx.url_lane:
+            fr = F.insert(fr, urls, ctx.score_fn(urls, cfg, state), mask,
+                          n_buckets=cfg.n_priority_buckets)
+            return fr, table, order_state, url_cash
+        scores = ctx.score_fn(urls, cfg, state, val=url_cash)
+        fr, table, refund = F.insert_valued(
+            fr, table, urls, scores, mask, jnp.where(mask, url_cash, 0.0),
+            n_buckets=cfg.n_priority_buckets, impl=ctx.impl)
+        return (fr, table, order_state.at[:, 0].add(refund),
+                jnp.where(mask, 0.0, url_cash))
+
     if r_local * ctx.k_row > cfg.fetch_batch:
         flat_pri = jnp.where(pre_sel, pri, F.NEG).reshape(-1)
         kth = lax.top_k(flat_pri, cfg.fetch_batch)[0][-1]
@@ -245,19 +303,22 @@ def allocate(ctx: StageContext, state: CrawlState,
         # ties at the threshold could exceed the budget by a few URLs —
         # acceptable (threads block briefly); give back the rest
         over = pre_sel & ~budget
-        fr = F.insert(fr, urls, ctx.score_fn(urls, cfg, state), over,
-                      n_buckets=cfg.n_priority_buckets)
+        fr, table, order_state, url_cash = give_back(
+            fr, table, order_state, url_cash, over)
         pre_sel = pre_sel & budget
     sel = pre_sel & alive
-    give_back = pre_sel & ~alive
-    fr = F.insert(fr, urls, ctx.score_fn(urls, cfg, state), give_back,
-                  n_buckets=cfg.n_priority_buckets)
+    dead_gb = pre_sel & ~alive
+    fr, table, order_state, url_cash = give_back(
+        fr, table, order_state, url_cash, dead_gb)
 
+    if ctx.url_lane:
+        state = state._replace(order_state=_with_lane(order_state, table))
     carry = StepCarry(shard=shard, alive=alive, urls=urls, sel=sel,
                       true_dom=jnp.zeros(urls.shape, jnp.int32),
                       link_cash=jnp.zeros(
-                          urls.shape + (cfg.outlinks_per_page,), jnp.float32))
-    return with_frontier(state, fr), carry, {"revived": give_back.sum()}
+                          urls.shape + (cfg.outlinks_per_page,), jnp.float32),
+                      url_cash=url_cash)
+    return with_frontier(state, fr), carry, {"revived": dead_gb.sum()}
 
 
 def fetch_analyze(ctx: StageContext, state: CrawlState, carry: StepCarry
@@ -387,18 +448,34 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
     row, ok = ctx.policy.local_row(cfg, state, shard, r_slots, r_u, r_pred)
     r_m = r_m & ok
 
-    # value-channel conservation (receiver half): deliver every received
-    # URL's value to its row BEFORE dedup — the value (e.g. OPIC cash)
-    # accrues to the page whether or not the URL itself is fresh
-    order_state = order_state.at[
-        jnp.where(r_has, row, r_slots), 0].add(
-        jnp.where(r_has, r_val, 0.0), mode="drop")
-
-    # bucket per local row, Bloom-dedup, insert into the frontier
     M = min(ctx.cap_ex * n_shards, cfg.frontier_capacity)
-    rb, rbmask, rdrop = RT.pack_buckets(r_u[:, None], row, r_slots, M,
-                                        valid=r_m)
-    rb = rb[..., 0]                                    # (r_slots, M)
+    if ctx.url_lane:
+        # per-URL delivery: the value must land in the exact cell its URL
+        # wins in the frontier, so it travels THROUGH the per-row bucketing;
+        # items that never reach a bucket (exact-dup, unowned, bucket
+        # overflow) refund to the receiving row's slot cash here
+        rbp, rbmask, rdrop, rkeep = RT.pack_buckets(
+            jnp.stack([r_u, lax.bitcast_convert_type(r_val, jnp.uint32)],
+                      axis=-1),
+            row, r_slots, M, valid=r_m, return_keep=True)
+        rb = rbp[..., 0]                               # (r_slots, M)
+        rv = lax.bitcast_convert_type(rbp[..., 1], jnp.float32)
+        lost = r_has & ~rkeep
+        order_state = order_state.at[
+            jnp.where(lost, row, r_slots), 0].add(
+            jnp.where(lost, r_val, 0.0), mode="drop")
+    else:
+        # value-channel conservation (receiver half): deliver every received
+        # URL's value to its row BEFORE dedup — the value (e.g. OPIC cash)
+        # accrues to the page whether or not the URL itself is fresh
+        order_state = order_state.at[
+            jnp.where(r_has, row, r_slots), 0].add(
+            jnp.where(r_has, r_val, 0.0), mode="drop")
+
+        # bucket per local row, Bloom-dedup, insert into the frontier
+        rb, rbmask, rdrop = RT.pack_buckets(r_u[:, None], row, r_slots, M,
+                                            valid=r_m)
+        rb = rb[..., 0]                                # (r_slots, M)
     delta["frontier_drop"] = rdrop
 
     bloom = DD.Bloom(state.bloom_bits, cfg.bloom_bits_log2)
@@ -408,8 +485,42 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
     delta["dedup_bloom"] = (rbmask & seen).sum()
 
     fr = frontier_view(state)
-    scores = ctx.score_fn(rb, cfg, state)
-    fr = F.insert(fr, rb, scores, fresh, n_buckets=cfg.n_priority_buckets)
+    if ctx.url_lane:
+        from repro.kernels.opic_update.ops import scatter_cash_cells
+        C = fr.url.shape[1]
+        # a Bloom-dup'd arrival is usually a URL still QUEUED in this row:
+        # find its cell and accumulate the cash there (classic OPIC — a
+        # page's cash grows with its in-link rate); only arrivals with no
+        # queued twin (already fetched, or a Bloom false positive) refund
+        # to the receiving row's slot cash
+        dupm = rbmask & ~fresh
+        twin = (rb[:, :, None] == fr.url[:, None, :]) \
+            & fr.valid[:, None, :] & dupm[:, :, None]  # (r_slots, M, C)
+        hit = twin.any(-1)
+        cell = jnp.argmax(twin, axis=-1).astype(jnp.int32)
+        rowix = jnp.broadcast_to(
+            jnp.arange(r_slots, dtype=jnp.int32)[:, None], rb.shape)
+        table = scatter_cash_cells(
+            order_state[:, ORD_URL0:], rowix, jnp.where(hit, cell, C), rv, hit,
+            impl=ctx.impl)
+        dup_refund = jnp.where(dupm & ~hit, rv, 0.0).sum(axis=1)
+        # fresh survivors' cash is deposited at the cell the insert assigns
+        # (scatter_cash_cells inside insert_valued); frontier-overflow drops
+        # are refunded by insert_valued itself
+        scores = ctx.score_fn(rb, cfg, state, val=rv)
+        fr, table, ins_refund = F.insert_valued(
+            fr, table, rb, scores, fresh, jnp.where(fresh, rv, 0.0),
+            n_buckets=cfg.n_priority_buckets, impl=ctx.impl)
+        order_state = _with_lane(order_state, table, dup_refund + ins_refund)
+        # re-prioritize the whole queue from the CURRENT cell cash: in-link
+        # cash accumulated since insert re-ranks queued URLs once per
+        # exchange (the bounded-cost point to refresh every queue at once)
+        fr = F.rescore(fr, ctx.score_fn(fr.url, cfg, state,
+                                        val=order_state[:, ORD_URL0:]),
+                       n_buckets=cfg.n_priority_buckets)
+    else:
+        scores = ctx.score_fn(rb, cfg, state)
+        fr = F.insert(fr, rb, scores, fresh, n_buckets=cfg.n_priority_buckets)
 
     state = with_frontier(state, fr)._replace(
         bloom_bits=bloom.bits, order_state=order_state,
@@ -456,10 +567,25 @@ def make_politeness_stage(max_per_row: int) -> Stage:
                    ) -> Tuple[CrawlState, StepCarry, StatsDelta]:
         order = jnp.cumsum(carry.sel.astype(jnp.int32), axis=1) - 1
         over = carry.sel & (order >= max_per_row)
-        fr = F.insert(frontier_view(state), carry.urls,
-                      ctx.score_fn(carry.urls, ctx.cfg, state), over,
-                      n_buckets=ctx.cfg.n_priority_buckets)
-        return (with_frontier(state, fr), carry._replace(sel=carry.sel & ~over),
+        if carry.url_cash is None:
+            fr = F.insert(frontier_view(state), carry.urls,
+                          ctx.score_fn(carry.urls, ctx.cfg, state), over,
+                          n_buckets=ctx.cfg.n_priority_buckets)
+            state = with_frontier(state, fr)
+        else:
+            # deferred URLs keep their cash: it re-enters the frontier cell
+            # with them (overflow refunds to the row's slot cash)
+            scores = ctx.score_fn(carry.urls, ctx.cfg, state,
+                                  val=carry.url_cash)
+            fr, table, refund = F.insert_valued(
+                frontier_view(state), state.order_state[:, ORD_URL0:], carry.urls,
+                scores, over, jnp.where(over, carry.url_cash, 0.0),
+                n_buckets=ctx.cfg.n_priority_buckets, impl=ctx.impl)
+            state = with_frontier(state, fr)._replace(
+                order_state=_with_lane(state.order_state, table, refund))
+            carry = carry._replace(
+                url_cash=jnp.where(over, 0.0, carry.url_cash))
+        return (state, carry._replace(sel=carry.sel & ~over),
                 {"politeness_deferred": over.sum()})
 
     politeness.placement = "post_allocate"

@@ -90,7 +90,12 @@ def canonical(url: jax.Array, cfg: CrawlConfig) -> jax.Array:
 def outlinks(url: jax.Array, cfg: CrawlConfig, cumw: jax.Array) -> jax.Array:
     """Parse a page: (..., ) -> (..., outlinks_per_page) discovered URLs.
 
-    Links come from the CANONICAL page (aliases share outlinks too)."""
+    Links come from the CANONICAL page (aliases share outlinks too). With
+    ``cfg.link_pop_bias`` > 0 the local target is drawn by TOURNAMENT: two
+    candidates, the more popular one wins with probability ``link_pop_bias``
+    — cheap stateless preferential attachment, so in-link rate correlates
+    with page importance (the regime online importance estimators like OPIC
+    assume; 0.0 keeps the historical uniform-target web bit-for-bit)."""
     c = canonical(url, cfg)[..., None]                   # content-determined
     i = jnp.arange(cfg.outlinks_per_page, dtype=U32)
     h_stay = hash2(c, i, 1)
@@ -98,7 +103,13 @@ def outlinks(url: jax.Array, cfg: CrawlConfig, cumw: jax.Array) -> jax.Array:
     h_loc = hash2(c, i, 3)
     stay = _uniform(h_stay) < cfg.topical_locality
     dom = jnp.where(stay, domain_of(url, cfg)[..., None], sample_domain(h_dom, cumw))
-    return make_url(dom, h_loc, cfg)
+    out = make_url(dom, h_loc, cfg)
+    if cfg.link_pop_bias > 0.0:
+        alt = make_url(dom, hash2(c, i, 6), cfg)
+        upset = _uniform(hash2(c, i, 8)) < cfg.link_pop_bias
+        return jnp.where(upset & (popularity(alt, cfg) > popularity(out, cfg)),
+                         alt, out)
+    return out
 
 
 def page_tokens(url: jax.Array, cfg: CrawlConfig, *, n_tokens: int,

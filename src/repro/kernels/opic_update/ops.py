@@ -39,3 +39,28 @@ def scatter_cash(cash, rows, contrib, mask, *, impl: str = "ref",
         mask = jnp.pad(mask, ((0, 0), (0, pad)))
     return registry.dispatch("opic_update", impl, cash, rows, contrib, mask,
                              tile=tile)
+
+
+@partial(jax.jit, static_argnames=("impl", "tile"))
+def scatter_cash_cells(table, rows, cols, contrib, mask, *,
+                       impl: str = "ref", tile: int = 256):
+    """table (R, C) f32; rows/cols/contrib/mask: item arrays of any (equal)
+    shape. Masked contributions scatter-add into their (row, col) CELL;
+    out-of-range coordinates drop.
+
+    The per-URL widening of :func:`scatter_cash` (the ``opic_url`` ordering's
+    frontier-aligned cash lane): the cell grid is flattened to one (R*C,)
+    cash row so the SAME registered kernel family (ref | pallas | interpret)
+    performs the scatter with the SAME tile-walk accumulation order —
+    bit-identity across implementations carries over unchanged."""
+    R, C = table.shape
+    r = rows.reshape(1, -1).astype(jnp.int32)
+    c = cols.reshape(1, -1).astype(jnp.int32)
+    v = contrib.reshape(1, -1)
+    ok = mask.reshape(1, -1) & (r >= 0) & (r < R) & (c >= 0) & (c < C)
+    # masked/out-of-range cells flatten to index R*C — past the lane, so the
+    # underlying kernel's drop rule applies (never aliases a real cell)
+    flat = jnp.where(ok, r * C + c, R * C)
+    out = scatter_cash(table.reshape(1, R * C), flat, v, ok,
+                       impl=impl, tile=tile)
+    return out.reshape(R, C)

@@ -35,7 +35,8 @@ def main(argv=None):
                     choices=list(orderings()),
                     help="URL-ordering policy per partitioned queue "
                          "(repro.ordering registry; opic = stateful "
-                         "importance estimation)")
+                         "importance estimation, opic_url = per-URL cash "
+                         "over the frontier columns)")
     ap.add_argument("--politeness", type=int, default=-1, metavar="N",
                     help="cap fetches per domain queue per step at N "
                          "(stages.make_politeness_stage)")

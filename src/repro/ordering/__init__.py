@@ -5,18 +5,21 @@ The repo's third registry: ``CrawlConfig.ordering`` names an
 for stateful estimators like OPIC, their order_state + update stage)
 through. Importing this package registers the built-ins.
 """
-from repro.ordering.policies import (ORD_WIDTH, OrderingPolicy, as_score_fn,
-                                     get_ordering, make_learned_ordering,
-                                     orderings, register_ordering)
+from repro.ordering.policies import (ORD_URL0, ORD_WIDTH, OrderingPolicy,
+                                     as_score_fn, get_ordering,
+                                     make_learned_ordering, orderings,
+                                     register_ordering)
 from repro.ordering import opic  # noqa: F401  (registers "opic")
+from repro.ordering import opic_url  # noqa: F401  (registers "opic_url")
 from repro.ordering.opic import total_cash, total_wealth
+from repro.ordering.opic_url import url_cash_table
 from repro.ordering.quality import (coverage_curve, hot_page_recall,
                                     ordering_quality, pooled_hot_set)
 
 __all__ = [
-    "ORD_WIDTH", "OrderingPolicy", "as_score_fn", "get_ordering",
+    "ORD_URL0", "ORD_WIDTH", "OrderingPolicy", "as_score_fn", "get_ordering",
     "make_learned_ordering", "orderings", "register_ordering",
-    "total_cash", "total_wealth",
+    "total_cash", "total_wealth", "url_cash_table",
     "coverage_curve", "hot_page_recall", "ordering_quality",
     "pooled_hot_set",
 ]

@@ -39,7 +39,8 @@ from repro.configs.base import CrawlConfig
 from repro.core import partitioner as PT
 from repro.core import ranker
 from repro.core import webgraph as W
-from repro.ordering.policies import OrderingPolicy, register_ordering
+from repro.ordering.policies import (ORD_WIDTH, OrderingPolicy,
+                                     register_ordering)
 
 # score blend: learned importance of the URL's domain slot vs the static
 # within-domain popularity tie-break
@@ -56,7 +57,7 @@ def init_opic(cfg: CrawlConfig, n_shards: int) -> jax.Array:
 def make_opic_score_fn(cfg: CrawlConfig, *, n_shards: int, axes):
     r_slots = cfg.n_slots // n_shards
 
-    def score(urls, cfg, state):
+    def score(urls, cfg, state, val=None):
         shard = lax.axis_index(axes).astype(jnp.int32)
         dom = W.domain_of(urls, cfg)
         slot = state.slot_of_domain[jnp.clip(dom, 0, cfg.n_domains - 1)]
@@ -132,10 +133,12 @@ OPIC = register_ordering(OrderingPolicy(
 # ---------------------------------------------------------------------------
 
 def total_cash(state) -> float:
-    """Total OPIC cash in the system: on-slot cash plus cash in transit in
-    the staging buffers. Conserved (up to f32 rounding in the spend split)
-    across steps, dispatches, checkpoints, and rebalances."""
-    cash = float(np.asarray(state.order_state[:, 0], np.float64).sum())
+    """Total OPIC cash in the system: slot cash, the per-URL lane when the
+    ordering keeps one (``opic_url`` — order_state columns 2:), and cash in
+    transit in the staging buffers. Conserved (up to f32 rounding in the
+    spend split) across steps, dispatches, checkpoints, and rebalances."""
+    os_ = np.asarray(state.order_state, np.float64)
+    cash = float(os_[:, 0].sum() + os_[:, ORD_WIDTH:].sum())
     sv = np.asarray(state.staging_val, np.float64)
     sn = np.asarray(state.staging_n)
     staged = sum(sv[i, :int(n)].sum() for i, n in enumerate(sn))

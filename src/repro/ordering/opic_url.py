@@ -1,0 +1,163 @@
+"""OPIC at per-URL granularity — the ``opic_url`` ordering policy.
+
+Slot-level OPIC (repro/ordering/opic.py) can decide WHICH domain queue
+deserves service but not which URL inside the queue should pop first — the
+paper's "order the URLs within each distributed set" goal (WebParF §URL
+ordering; cf. "URL ordering policies for distributed crawlers: a review",
+arXiv:1611.01228). This policy adds a BOUNDED per-URL cash lane over the
+frontier columns: ``CrawlState.order_state`` widens from (n_slots, 2) to
+(n_slots, 2 + frontier_capacity) —
+
+    col 0            slot cash    (the prior / refund pool, exactly as opic)
+    col 1            slot history
+    cols 2:2+C       per-URL cash, row/column-ALIGNED with the frontier
+                     queues: cell (r, c) holds the cash of ``f_url[r, c]``;
+                     invalid frontier cells hold exactly 0.0
+
+Lifecycle (the ``url_lane`` machinery in core/stages.py, DESIGN.md §13):
+
+  * init    — every domain slot starts with 1.0 slot cash; the URL lane is
+    empty (cash reaches URLs only by circulating through fetches).
+  * pop     — ``allocate`` harvests each popped URL's cell into
+    ``StepCarry.url_cash`` and zeroes the cell; give-backs (fetch budget,
+    dead shard, politeness deferral) re-deposit at the URL's NEW cell via
+    ``frontier.insert_valued``.
+  * spend   — the update stage banks each fetched page's spend — its own
+    harvested cash plus an equal share of its slot's prior cash — into slot
+    history and splits it 1/O over the page's outlinks; ALL contributions
+    ride the stages' conserved value channel (``link_cash`` ->
+    ``staging_val`` -> the dispatch payload lane), local and remote alike.
+  * deliver — the dispatcher drops a received URL's cash into the exact
+    frontier cell the URL wins (``kernels/opic_update.scatter_cash_cells``,
+    the widened scatter family — ref | pallas | interpret, bit-identical).
+    A Bloom-duplicate arrival whose URL is STILL QUEUED accumulates into
+    the existing cell — classic OPIC, cash grows with in-link rate; only
+    arrivals with no queued twin, unowned URLs, and bucket/row overflow
+    REFUND to the receiving row's slot cash. ``frontier.rescore`` then
+    re-buckets every queued URL from its current cell cash (FIFO arrival
+    stamps preserved) — one whole-queue re-prioritization per exchange.
+  * bound   — the lane is a fixed (n_slots, frontier_capacity) block; every
+    evicted or dropped value refunds to the owning slot, never grows the
+    table, so memory stays O(frontier), not O(URLs discovered).
+  * survive — order_state is one CrawlState leaf: it checkpoints with the
+    crawl, and C4 rebalance migrates the frontier row and its cash row in
+    the same permutation (stale duplicate rows scrubbed by
+    crawler.apply_rebalance), preserving alignment and total cash.
+
+tests/test_invariants.py property-checks conservation + cell alignment over
+random step/fail/heal/checkpoint schedules; benchmarks/ordering.py races
+opic_url against opic/fifo at an equal step budget.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import CrawlConfig
+from repro.core import partitioner as PT
+from repro.core import ranker
+from repro.core import webgraph as W
+from repro.ordering.policies import (ORD_WIDTH, OrderingPolicy,
+                                     register_ordering)
+
+# score blend: slot-importance prior vs the URL's own accumulated cash vs the
+# static within-domain popularity component
+_W_PRIOR, _W_URL, _W_POP = 0.4, 0.15, 0.45
+
+
+def init_opic_url(cfg: CrawlConfig, n_shards: int) -> jnp.ndarray:
+    """Uniform unit cash on domain-bearing slots; empty history + URL lane."""
+    dm = PT.identity_map(cfg, n_shards)
+    slot_cash = (dm.domain_of_slot >= 0).astype(jnp.float32)[:, None]
+    lane = jnp.zeros((cfg.n_slots, cfg.frontier_capacity), jnp.float32)
+    return jnp.concatenate([slot_cash, jnp.zeros_like(slot_cash), lane],
+                           axis=1)
+
+
+def url_cash_table(state) -> jnp.ndarray:
+    """The (n_slots, frontier_capacity) per-URL lane view of order_state."""
+    return state.order_state[:, ORD_WIDTH:]
+
+
+def make_opic_url_score_fn(cfg: CrawlConfig, *, n_shards: int, axes):
+    r_slots = cfg.n_slots // n_shards
+
+    def score(urls, cfg, state, val=None):
+        shard = lax.axis_index(axes).astype(jnp.int32)
+        dom = W.domain_of(urls, cfg)
+        slot = state.slot_of_domain[jnp.clip(dom, 0, cfg.n_domains - 1)]
+        row = slot - shard * r_slots
+        local = (row >= 0) & (row < r_slots)
+        imp = state.order_state[:, 0] + state.order_state[:, 1]
+        rel = imp / jnp.maximum(imp.max(), 1e-6)
+        s_imp = jnp.take(rel, jnp.clip(row, 0, r_slots - 1))
+        pop = W.popularity(urls, cfg)
+        # within-queue rank: the URL's cash RELATIVE to its queue's mean
+        # delivery. Cash amplitude varies by orders of magnitude across
+        # domains (Zipf source wealth) but is similar WITHIN a queue
+        # (topical locality), so row-normalizing isolates the in-link-rate
+        # signal — a URL hit twice while queued clears 0.5 — instead of
+        # letting rich-domain amplitude noise override relevance in the
+        # global fetch-budget competition. val is row-aligned 2-D at every
+        # stage call site (allocate pops, dispatch inserts, rescore).
+        if val is None:
+            s_url = jnp.zeros_like(pop)
+        else:
+            mean = (val.sum(axis=-1, keepdims=True)
+                    / jnp.maximum((val > 0).sum(axis=-1, keepdims=True), 1))
+            s_url = val / (val + jnp.maximum(mean, 1e-9))
+        s = jnp.where(local,
+                      _W_PRIOR * s_imp + _W_URL * s_url + _W_POP * pop,
+                      ranker.score_urls(urls, cfg))
+        return jnp.clip(s, 0.0, 0.999)
+
+    return score
+
+
+def make_opic_url_update_stage():
+    """The per-URL OPIC spend step (between fetch_analyze and extract).
+
+    Unlike slot-level opic there is no immediate local scatter: every
+    contribution — local or cross-shard — rides the conserved value channel
+    and is delivered into the target URL's frontier cell (or refunded) by
+    dispatch_exchange. The cell scatter happens THERE, through
+    ``scatter_cash_cells``."""
+
+    def opic_url_update(ctx, state, carry):
+        cfg = ctx.cfg
+        os_ = state.order_state
+        cash, hist = os_[:, 0], os_[:, 1]
+
+        # spend: each fetched page spends its harvested cell cash plus an
+        # equal share of its slot's prior cash
+        n_f = carry.sel.sum(axis=1)                                 # (r,)
+        spend_slot = jnp.where(n_f > 0, cash, 0.0)
+        share = jnp.where(
+            carry.sel,
+            (spend_slot / jnp.maximum(n_f, 1).astype(jnp.float32))[:, None],
+            0.0)                                                    # (r, k)
+        page_spend = share + jnp.where(carry.sel, carry.url_cash, 0.0)
+        per_link = page_spend[..., None] / cfg.outlinks_per_page    # (r, k, 1)
+
+        # distribute along the fetched pages' outlinks (parsed once here,
+        # cached into the carry so extract_stage reuses it)
+        links = W.outlinks(carry.urls, cfg, ctx.cumw)               # (r, k, O)
+        lmask = jnp.broadcast_to(carry.sel[..., None], links.shape)
+        contrib = jnp.where(lmask, jnp.broadcast_to(per_link, links.shape),
+                            0.0)
+
+        order = jnp.concatenate(
+            [(cash - spend_slot)[:, None],
+             (hist + page_spend.sum(axis=1))[:, None],
+             os_[:, ORD_WIDTH:]], axis=1)
+        return (state._replace(order_state=order),
+                carry._replace(link_cash=contrib, links=links,
+                               url_cash=jnp.zeros_like(carry.url_cash)), {})
+
+    opic_url_update.placement = "post_fetch"
+    return opic_url_update
+
+
+OPIC_URL = register_ordering(OrderingPolicy(
+    "opic_url", True, init_opic_url, make_opic_url_score_fn,
+    make_opic_url_update_stage(), url_lane=True))

@@ -17,6 +17,10 @@ ordering policies for distributed crawlers: a review" (Deepika & Dixit):
               STATEFUL per-slot cash/history estimated *during* the crawl
               (repro/ordering/opic.py; kernels/opic_update does the hot
               scatter-add).
+  opic_url  — OPIC at per-URL granularity (repro/ordering/opic_url.py): a
+              bounded per-URL cash lane over the frontier columns ranks
+              WITHIN each queue, with the slot table as prior (the
+              ``url_lane`` machinery, DESIGN.md §13).
   learned   — a deterministic linear probe over ranker.url_features — the
               "bring a model" slot; :func:`make_learned_ordering` wraps a
               trained scorer into a registrable policy.
@@ -37,31 +41,44 @@ import jax.numpy as jnp
 from repro.configs.base import CrawlConfig
 from repro.core import ranker
 
-# columns of CrawlState.order_state — fixed so the pytree structure (and
-# checkpoints) are stable across ordering policies; stateless policies carry
-# zeros. OPIC: col 0 = cash, col 1 = history.
+# columns of CrawlState.order_state — the first two are fixed so slot-level
+# accounting is layout-stable across ordering policies; stateless policies
+# carry zeros. OPIC: col 0 = cash, col 1 = history. A ``url_lane`` policy
+# (opic_url) appends ``frontier_capacity`` more columns — a per-URL value
+# lane row/column-aligned with the frontier queues (DESIGN.md §13).
 ORD_WIDTH = 2
+ORD_URL0 = ORD_WIDTH      # first column of the per-URL lane, when present
 
 
 class OrderingPolicy(NamedTuple):
     """One URL-ordering scheme, resolvable by name from ``cfg.ordering``.
 
       stateful       — does the policy maintain per-slot ``order_state``?
-      init_state     — (cfg, n_shards) -> (n_slots, ORD_WIDTH) f32 initial
+      init_state     — (cfg, n_shards) -> (n_slots, >= ORD_WIDTH) f32 initial
                        ordering state (row-sharded with the frontier).
-      make_score_fn  — (cfg, *, n_shards, axes) -> score_fn(urls, cfg, state)
-                       mapping URLs to [0, 1) queue scores; traced inside the
-                       shard_mapped step, so it sees the LOCAL state block
-                       and may use ``lax.axis_index(axes)``.
+      make_score_fn  — (cfg, *, n_shards, axes) ->
+                       score_fn(urls, cfg, state, val=None) mapping URLs to
+                       [0, 1) queue scores; traced inside the shard_mapped
+                       step, so it sees the LOCAL state block and may use
+                       ``lax.axis_index(axes)``. ``val`` is only passed by
+                       the stages when ``url_lane`` is set: the per-URL value
+                       known at the call site (incoming dispatch cash /
+                       harvested cell cash), None elsewhere.
       update_stage   — optional pipeline stage (core/stages.Stage) that
                        updates order_state from this step's fetches (runs
                        between fetch_analyze and extract).
+      url_lane       — the policy keeps per-URL state in
+                       order_state[:, ORD_URL0:], frontier-cell-aligned; the
+                       stages then harvest it on pop, thread it through
+                       give-backs, and deliver dispatch values into cells
+                       (core/stages.py gates all of that on this flag).
     """
     name: str
     stateful: bool
     init_state: Callable
     make_score_fn: Callable
     update_stage: Optional[Callable] = None
+    url_lane: bool = False
 
 
 _ORDERINGS: Dict[str, OrderingPolicy] = {}
@@ -99,7 +116,7 @@ def _ensure() -> None:
 def as_score_fn(fn: Callable) -> Callable:
     """Adapt a legacy stateless ``(urls, cfg)`` scorer — ranker.score_urls, a
     learned scorer — to the state-aware ordering signature."""
-    def score(urls, cfg, state):
+    def score(urls, cfg, state, val=None):
         return fn(urls, cfg)
     return score
 
@@ -118,7 +135,7 @@ def _backlink_score_fn(cfg, *, n_shards, axes):
 
 
 def _fifo_score_fn(cfg, *, n_shards, axes):
-    def score(urls, cfg, state):
+    def score(urls, cfg, state, val=None):
         # constant score -> every URL shares one priority bucket -> the
         # frontier's FIFO tie-break is the whole ordering
         return jnp.full(urls.shape, 0.5, jnp.float32)
@@ -136,7 +153,7 @@ _LEARNED_B = -1.0
 def _learned_score_fn(cfg, *, n_shards, axes):
     w = jnp.asarray(_LEARNED_W, jnp.float32)
 
-    def score(urls, cfg, state):
+    def score(urls, cfg, state, val=None):
         feats = ranker.url_features(urls, cfg)             # (..., 8)
         s = jax.nn.sigmoid(feats @ w + _LEARNED_B)
         return jnp.clip(s, 0.0, 0.999)

@@ -87,6 +87,13 @@ except ImportError:
 
     def given(*strategies):
         def deco(fn):
+            # like real hypothesis, the strategies fill the TRAILING
+            # parameters; any leading ones stay visible to pytest so
+            # fixtures and @parametrize compose with @given
+            params = list(inspect.signature(fn).parameters.values())
+            passthrough = params[:len(params) - len(strategies)]
+            filled = [p.name for p in params[len(params) - len(strategies):]]
+
             @functools.wraps(fn)
             def runner(*args, **kwargs):
                 # read at call time: @settings may wrap @given or vice versa
@@ -98,7 +105,7 @@ except ImportError:
                     ex = tuple((s.min_sample if i == 0 else s.sample)(rng)
                                for s in strategies)
                     try:
-                        fn(*args, *ex, **kwargs)
+                        fn(*args, **kwargs, **dict(zip(filled, ex)))
                     except Exception as e:
                         raise AssertionError(
                             f"falsifying example (fallback): {ex!r}") from e
@@ -106,6 +113,6 @@ except ImportError:
             # pytest must not mistake the strategy-filled params for fixtures
             # (functools.wraps leaves __wrapped__, which signature() follows)
             del runner.__wrapped__
-            runner.__signature__ = inspect.Signature()
+            runner.__signature__ = inspect.Signature(passthrough)
             return runner
         return deco

@@ -1,0 +1,249 @@
+"""Property-based INVARIANT suite for the crawl subsystem.
+
+The ordering/partitioning machinery now carries three interacting
+system-wide invariants that used to be spot-checked on default configs only:
+
+  1. CASH CONSERVATION — total OPIC cash (slot pool + per-URL lane +
+     in-flight staging values) is constant across steps, dispatches,
+     failures, revivals, heals, checkpoints, and restores (stateless
+     orderings: order_state stays exactly zero).
+  2. OWNERSHIP DISJOINT COVER — the domain <-> slot maps stay mutually
+     consistent: every domain maps to a real slot, no two slots claim the
+     same domain, and claimed slots point back at their domain.
+  3. URL-LANE CELL ALIGNMENT — a ``url_lane`` ordering (opic_url) keeps
+     cash ONLY on valid frontier cells (invalid cells hold exactly 0), so
+     the lane and the queues never drift apart.
+
+Random OP SCHEDULES (step / run-to-dispatch / kill-or-revive / mid-schedule
+checkpoint+restore) are drawn per example and the invariants re-checked
+after EVERY op, for every registered ordering x partitioning combination.
+Runs under real hypothesis when installed, else the deterministic fallback
+shim (tests/_hypothesis_fallback.py).
+
+The kernel implementation is selectable via the ``REPRO_KERNEL_IMPL`` env
+var — the CI test-matrix job replays this suite per implementation.
+
+The multi-shard variant (4 crawl shards, real C4 heal) runs as a slow
+subprocess test below with fixed schedules.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import numpy as np
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+
+from repro.api import CrawlSession
+from repro.configs import get_reduced
+from repro.configs.base import scaled
+from repro.core import partitioner as PT
+from repro.launch.mesh import make_host_mesh
+from repro.ordering import ORD_URL0, get_ordering, orderings, total_cash
+from repro.train.fault import revive
+
+KERNEL_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "auto")
+
+COMBOS = [(o, p) for o in orderings() for p in PT.policies()]
+
+_SESSIONS = {}
+_MESH = None
+
+
+def _session(ordering: str, partitioning: str) -> CrawlSession:
+    """One compiled session per combo, reset per example (cheap replays)."""
+    global _MESH
+    if _MESH is None:
+        _MESH = make_host_mesh()
+    key = (ordering, partitioning)
+    if key not in _SESSIONS:
+        cfg = scaled(get_reduced("webparf"), ordering=ordering,
+                     partitioning=partitioning, kernel_impl=KERNEL_IMPL,
+                     link_pop_bias=1.0)
+        _SESSIONS[key] = CrawlSession(cfg, _MESH)
+    return _SESSIONS[key].reset()
+
+
+def check_invariants(sess: CrawlSession, c0: float, label: str) -> None:
+    state, cfg = sess.state, sess.cfg
+    policy = get_ordering(cfg.ordering)
+    os_ = np.asarray(state.order_state, np.float64)
+
+    # 1. conservation
+    if policy.stateful:
+        np.testing.assert_allclose(
+            total_cash(state), c0, rtol=1e-4,
+            err_msg=f"{label}: total cash not conserved")
+        assert os_.min() >= -1e-6, f"{label}: negative cash/history"
+    else:
+        assert not os_.any(), \
+            f"{label}: stateless ordering mutated order_state"
+
+    # 3. url-lane cell alignment
+    if policy.url_lane:
+        lane = os_[:, ORD_URL0:]
+        valid = np.asarray(state.f_valid)
+        stray = np.abs(lane[~valid]).sum()
+        assert stray == 0.0, \
+            f"{label}: {stray} cash stranded on invalid frontier cells"
+
+    # 2. ownership disjoint cover
+    sod = np.asarray(state.slot_of_domain)
+    dos = np.asarray(state.slot_domain)
+    n_slots = dos.shape[0]
+    assert ((sod >= 0) & (sod < n_slots)).all(), \
+        f"{label}: domain mapped outside the slot space"
+    owned = dos[dos >= 0]
+    assert len(np.unique(owned)) == len(owned), \
+        f"{label}: a domain is claimed by two slots"
+    np.testing.assert_array_equal(
+        dos[sod[owned]], owned,
+        err_msg=f"{label}: slot_of_domain disagrees with domain_of_slot")
+
+
+def _apply_op(sess: CrawlSession, op: int, tmp: str) -> str:
+    """One schedule op. 0: single step; 1: run through the next dispatch
+    boundary; 2: kill shard 0 / revive whatever is dead (toggles, so every
+    schedule exercises dead-shard give-backs AND recovery); 3: checkpoint at
+    the CURRENT (arbitrary) step, advance, restore back."""
+    iv = sess.cfg.dispatch_interval
+    if op == 0:
+        sess.run(1)
+        return "step"
+    if op == 1:
+        sess.run(iv - (sess.t % iv))
+        return "dispatch"
+    if op == 2:
+        alive = np.asarray(sess.state.shard_alive)
+        if alive.all():
+            sess.inject_failure(0)
+            return "fail(0)"
+        sess.state = revive(sess.state, list(np.flatnonzero(~alive)))
+        return "revive"
+    before_t = sess.t
+    sess.checkpoint(tmp)
+    sess.run(1)
+    sess.restore(tmp)
+    assert sess.t == before_t, \
+        f"restore drifted the counter: {sess.t} != {before_t}"
+    return f"ckpt/restore@{before_t}"
+
+
+@pytest.mark.parametrize("ordering,partitioning", COMBOS,
+                         ids=[f"{o}-{p}" for o, p in COMBOS])
+@settings(max_examples=3, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=6))
+def test_random_schedule_conserves_cash_and_ownership(
+        ordering, partitioning, ops):
+    sess = _session(ordering, partitioning)
+    c0 = total_cash(sess.state)
+    with tempfile.TemporaryDirectory() as tmp:
+        trace = []
+        for op in ops:
+            trace.append(_apply_op(sess, op, tmp))
+            check_invariants(sess, c0, f"[{ordering}/{partitioning}] "
+                                       f"after {' -> '.join(trace)}")
+
+
+def test_initial_states_satisfy_invariants():
+    for ordering, partitioning in COMBOS:
+        sess = _session(ordering, partitioning)
+        check_invariants(sess, total_cash(sess.state),
+                         f"[{ordering}/{partitioning}] init")
+
+
+# ---------------------------------------------------------------------------
+# multi-shard (4 crawl processes): real C4 fail -> heal -> rebalance cycles
+# ---------------------------------------------------------------------------
+
+MULTI_SHARD_INVARIANTS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    os.environ.setdefault("REPRO_KERNEL_IMPL", %r)
+    import sys
+    sys.path.insert(0, "src")
+    sys.path.insert(0, "tests")
+    import numpy as np
+    from repro.configs import get_reduced
+    from repro.configs.base import scaled
+    from repro.api import CrawlSession
+    from repro.ordering import total_cash
+    from test_invariants import check_invariants
+
+    # fixed schedules: fail/heal straddle dispatch boundaries AND arbitrary
+    # mid-interval steps, with a checkpoint/restore inside the dead window
+    # url_hash AND random route by _hash_row, which populates spare rows —
+    # the displaced-row refund hazard in apply_rebalance; cover both
+    # stateful orderings across all three routing styles
+    COMBOS = (("opic", "webparf"), ("opic", "url_hash"),
+              ("opic_url", "webparf"), ("opic_url", "url_hash"),
+              ("opic_url", "random"))
+    if True:
+        for ordering, partitioning in COMBOS:
+            cfg = scaled(get_reduced("webparf"), ordering=ordering,
+                         partitioning=partitioning, link_pop_bias=1.0,
+                         kernel_impl=os.environ["REPRO_KERNEL_IMPL"])
+            sess = CrawlSession(cfg)
+            iv = cfg.dispatch_interval
+            c0 = total_cash(sess.state)
+            tag = ordering + "/" + partitioning
+
+            sess.run(iv + 1)
+            check_invariants(sess, c0, tag + " pre-fail")
+            sess.inject_failure(1)
+            sess.run(iv)                  # dead shard refunds staged cash
+            check_invariants(sess, c0, tag + " dead")
+            import tempfile
+            with tempfile.TemporaryDirectory() as tmp:
+                sess.checkpoint(tmp)
+                sess.run(2)
+                sess.restore(tmp)         # restore INTO the dead window
+            check_invariants(sess, c0, tag + " restored-dead")
+            sess.heal()                   # C4 rebalance migrates cash rows
+            check_invariants(sess, c0, tag + " healed")
+            if partitioning == "webparf":
+                # domain routing never touches spare rows, so the healed
+                # layout owns every unit of cash on MAPPED slots (url_hash
+                # legitimately scatters cash across all rows)
+                owned = np.asarray(sess.state.slot_domain) >= 0
+                stray = np.abs(
+                    np.asarray(sess.state.order_state)[~owned]).sum()
+                assert stray == 0.0, (tag, "cash on unmapped slots", stray)
+            sess.run(2 * iv)
+            check_invariants(sess, c0, tag + " post-heal")
+
+    # rebalance's MERGE fallback: kill 3 of 4 shards, leaving more homeless
+    # domains than free slots on the survivor — merged domains share a slot
+    # and their old rows' cash must refund, not vanish (regression: the dup
+    # scrub used to destroy the only copy of a merged domain's cash)
+    for ordering in ("opic", "opic_url"):
+        cfg = scaled(get_reduced("webparf"), ordering=ordering,
+                     link_pop_bias=1.0,
+                     kernel_impl=os.environ["REPRO_KERNEL_IMPL"])
+        sess = CrawlSession(cfg)
+        iv = cfg.dispatch_interval
+        c0 = total_cash(sess.state)
+        tag = ordering + "/webparf merge-heal"
+        sess.run(iv + 2)
+        sess.inject_failure([1, 2, 3])
+        sess.run(iv)
+        check_invariants(sess, c0, tag + " dead x3")
+        sess.heal()
+        check_invariants(sess, c0, tag + " healed")
+        sess.run(iv)
+        check_invariants(sess, c0, tag + " post-heal")
+    print("multi-shard invariants: OK")
+""") % (KERNEL_IMPL,)
+
+
+@pytest.mark.slow
+def test_invariants_through_fail_heal_multi_shard():
+    r = subprocess.run([sys.executable, "-c", MULTI_SHARD_INVARIANTS],
+                       capture_output=True, text=True, timeout=900, cwd=".")
+    if r.returncode != 0:
+        raise AssertionError(f"STDOUT:\n{r.stdout[-3000:]}\n"
+                             f"STDERR:\n{r.stderr[-3000:]}")
+    assert "multi-shard invariants: OK" in r.stdout

@@ -231,6 +231,119 @@ def test_opic_conservation_through_fail_heal_multi_shard():
 
 
 # ---------------------------------------------------------------------------
+# opic_url: the per-URL cash lane (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def test_opic_url_registered_with_url_lane(cfg, mesh):
+    pol = get_ordering("opic_url")
+    assert pol.stateful and pol.url_lane and pol.update_stage is not None
+    assert not get_ordering("opic").url_lane
+    sess = CrawlSession(scaled(cfg, ordering="opic_url"), mesh)
+    # (n_slots, 2 + frontier_capacity): slot cash, slot history, URL lane
+    assert sess.state.order_state.shape == \
+        (cfg.n_slots, ORD_WIDTH + cfg.frontier_capacity)
+    assert total_cash(sess.state) == float(cfg.n_domains)
+
+
+def test_opic_url_cash_conserved_and_cell_aligned(cfg, mesh):
+    sess = CrawlSession(scaled(cfg, ordering="opic_url"), mesh)
+    c0 = total_cash(sess.state)
+    sess.run(3 * cfg.dispatch_interval)
+    np.testing.assert_allclose(total_cash(sess.state), c0, rtol=1e-5)
+    lane = np.asarray(sess.state.order_state[:, ORD_WIDTH:])
+    valid = np.asarray(sess.state.f_valid)
+    assert lane.shape == valid.shape
+    # invariant: cash lives ONLY on valid frontier cells...
+    assert np.abs(lane[~valid]).sum() == 0.0
+    # ...and actually circulates out of the slot pool into the lane
+    assert lane.sum() > 0.0
+    assert total_wealth(sess.state) > c0
+
+
+def test_scatter_cash_cells_ref_interpret_bit_identical():
+    """The widened opic_update op: cell-grid scatter must be bit-identical
+    across implementations (same flattened tile walk), drop masked and
+    out-of-range coordinates, and conserve the kept contributions."""
+    from repro.kernels.opic_update.ops import scatter_cash_cells
+    rng = np.random.default_rng(11)
+    R, C, N = 12, 48, 700
+    table = jnp.asarray(rng.random((R, C)), jnp.float32)
+    rows = jnp.asarray(rng.integers(-1, R + 2, (N,)), jnp.int32)
+    cols = jnp.asarray(rng.integers(-1, C + 3, (N,)), jnp.int32)
+    contrib = jnp.asarray(rng.random((N,)) * 0.1, jnp.float32)
+    mask = jnp.asarray(rng.random((N,)) < 0.7)
+    a = scatter_cash_cells(table, rows, cols, contrib, mask, impl="ref")
+    b = scatter_cash_cells(table, rows, cols, contrib, mask, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    keep = np.asarray(mask) & (np.asarray(rows) >= 0) & \
+        (np.asarray(rows) < R) & (np.asarray(cols) >= 0) & \
+        (np.asarray(cols) < C)
+    total = np.asarray(table, np.float64).sum() + \
+        np.asarray(contrib, np.float64)[keep].sum()
+    np.testing.assert_allclose(np.asarray(a, np.float64).sum(), total,
+                               rtol=1e-5)
+
+
+def test_opic_url_trajectory_ref_interpret_bit_identical(cfg, mesh):
+    steps = 2 * cfg.dispatch_interval
+    out = {}
+    for impl in ("ref", "interpret"):
+        sess = CrawlSession(
+            scaled(cfg, ordering="opic_url", kernel_impl=impl), mesh)
+        rep = sess.run(steps, mode="eager")
+        out[impl] = (sess.state, rep)
+    assert_states_equal(out["ref"][0], out["interpret"][0], "opic_url impl")
+    np.testing.assert_array_equal(out["ref"][1].urls,
+                                  out["interpret"][1].urls)
+
+
+def test_opic_url_checkpoint_restore_roundtrip(cfg, mesh, tmp_path):
+    sess = CrawlSession(scaled(cfg, ordering="opic_url"), mesh)
+    sess.run(cfg.dispatch_interval + 2)      # arbitrary mid-interval point
+    sess.checkpoint(str(tmp_path))
+    twin = CrawlSession(scaled(cfg, ordering="opic_url"), mesh)
+    twin.restore(str(tmp_path))
+    assert_states_equal(twin.state, sess.state, "restored opic_url")
+    assert total_cash(twin.state) == total_cash(sess.state)
+    ra = sess.run(cfg.dispatch_interval)
+    rb = twin.run(cfg.dispatch_interval)
+    np.testing.assert_array_equal(ra.urls, rb.urls)
+
+
+def test_opic_url_politeness_defers_cash_with_urls(cfg, mesh):
+    """Deferred pops must re-enter the frontier WITH their cash (total still
+    conserved, lane still cell-aligned)."""
+    c = scaled(cfg, ordering="opic_url")
+    # budget 0 defers EVERY pop: each step harvests the popped cells' cash
+    # and must hand all of it back through insert_valued
+    sess = CrawlSession(c, mesh, extra_stages=[ST.make_politeness_stage(0)])
+    c0 = total_cash(sess.state)
+    sess.run(2 * c.dispatch_interval)
+    assert sess.stats["politeness_deferred"] > 0
+    np.testing.assert_allclose(total_cash(sess.state), c0, rtol=1e-5)
+    lane = np.asarray(sess.state.order_state[:, ORD_WIDTH:])
+    assert np.abs(lane[~np.asarray(sess.state.f_valid)]).sum() == 0.0
+
+
+@pytest.mark.slow
+def test_opic_url_beats_opic_at_equal_budget():
+    """The tentpole's reason to exist: per-URL cash must capture more
+    importance than slot-granularity OPIC at the same step budget on a web
+    whose link structure carries importance (link_pop_bias — the regime
+    online estimators assume; benchmarks/ordering.py reports the race)."""
+    from repro.configs import get_arch
+    base = scaled(get_arch("webparf")[0], n_domains=16, frontier_capacity=256,
+                  fetch_batch=16, outlinks_per_page=8, bloom_bits_log2=14,
+                  dispatch_capacity=512, url_space_log2=20,
+                  seed_urls_per_domain=8, link_pop_bias=1.0)
+    mass = {}
+    for name in ("opic", "opic_url"):
+        rep = CrawlSession(scaled(base, ordering=name)).run(16)
+        mass[name] = rep.ordering_quality["importance_mass"]
+    assert mass["opic_url"] > mass["opic"], mass
+
+
+# ---------------------------------------------------------------------------
 # quality metrics + the paper-facing claim: opic beats fifo at equal budget
 # ---------------------------------------------------------------------------
 

@@ -75,6 +75,32 @@ def test_run_returns_typed_report(cfg, mesh):
 # fused scan == eager, per step, across >= 2 dispatch intervals
 # ---------------------------------------------------------------------------
 
+def _all_orderings():
+    from repro.ordering import orderings
+    return sorted(orderings())
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret", "pallas"])
+@pytest.mark.parametrize("ordering", _all_orderings())
+def test_eager_scan_bit_identity_matrix(cfg, mesh, ordering, impl):
+    """Differential matrix: eager vs fused run_chunk must agree BIT-FOR-BIT
+    for every registered ordering policy under every kernel implementation —
+    not just the defaults. (The compiled "pallas" cell needs real TPU
+    hardware; "interpret" runs the identical kernel bodies on CPU.)"""
+    if impl == "pallas" and jax.default_backend() != "tpu":
+        pytest.skip("compiled pallas kernels need a TPU backend "
+                    "(interpret covers the kernel bodies on CPU)")
+    c = scaled(cfg, ordering=ordering, kernel_impl=impl)
+    steps = 2 * c.dispatch_interval
+    a, b = CrawlSession(c, mesh), CrawlSession(c, mesh)
+    rep_e = a.run(steps, mode="eager")
+    rep_s = b.run(steps, mode="scan")
+    np.testing.assert_array_equal(rep_s.urls, rep_e.urls)
+    np.testing.assert_array_equal(rep_s.per_step, rep_e.per_step)
+    assert_states_equal(b.state, a.state, f"{ordering}/{impl} scan vs eager")
+    assert rep_s.stats == rep_e.stats
+
+
 def test_run_chunk_scan_matches_eager_trajectory(cfg, mesh):
     steps = 3 * cfg.dispatch_interval
     eager = CrawlSession(cfg, mesh)
@@ -236,6 +262,49 @@ def test_checkpoint_restore_roundtrip(cfg, mesh, tmp_path):
     rb = twin.run(cfg.dispatch_interval)
     np.testing.assert_array_equal(ra.urls, rb.urls)
     assert_states_equal(twin.state, sess.state, "after resume")
+
+
+@pytest.mark.parametrize("t0_off", [1, 2, 3])
+def test_restore_at_arbitrary_step_matches_uninterrupted(cfg, mesh, tmp_path,
+                                                         t0_off):
+    """Regression: a checkpoint written at an ARBITRARY mid-interval step
+    (not just interval boundaries) must restore to an identical trajectory —
+    same URLs, same final state, no step-counter drift."""
+    iv = cfg.dispatch_interval
+    t0 = iv + t0_off                         # strictly inside interval 2
+    T = 3 * iv + 2
+    sess = CrawlSession(cfg, mesh)
+    sess.run(t0)
+    sess.checkpoint(str(tmp_path))
+    rep_cont = sess.run(T - t0)              # the uninterrupted continuation
+
+    twin = CrawlSession(cfg, mesh).restore(str(tmp_path))
+    assert twin.t == t0 == int(np.asarray(twin.state.step))
+    rep_twin = twin.run(T - t0)
+    np.testing.assert_array_equal(rep_twin.urls, rep_cont.urls)
+    np.testing.assert_array_equal(rep_twin.per_step, rep_cont.per_step)
+    assert_states_equal(twin.state, sess.state, f"resume from t={t0}")
+    assert twin.t == sess.t == T
+
+
+def test_restore_explicit_step_resyncs_counter(cfg, mesh, tmp_path):
+    """Several checkpoints at arbitrary steps; restoring each BY STEP must
+    resync the session counter to exactly that step (and to state.step)."""
+    iv = cfg.dispatch_interval
+    marks = [1, iv, iv + 3]
+    sess = CrawlSession(cfg, mesh)
+    states = {}
+    for m in marks:
+        sess.run(m - sess.t)
+        sess.checkpoint(str(tmp_path))
+        states[m] = sess.state
+    for m in marks:
+        twin = CrawlSession(cfg, mesh).restore(str(tmp_path), step=m)
+        assert twin.t == m == int(np.asarray(twin.state.step))
+        assert_states_equal(twin.state, states[m], f"explicit step {m}")
+    # default restore resolves to the LATEST mark
+    twin = CrawlSession(cfg, mesh).restore(str(tmp_path))
+    assert twin.t == marks[-1]
 
 
 # ---------------------------------------------------------------------------
