@@ -44,6 +44,18 @@ def main():
           f"(coverage AUC {q['coverage_auc']:.3f}) — try ordering='opic' "
           f"(repro.ordering registry)")
 
+    # --- coordination modes (the standalone launch driver) ------------------
+    # the same system under a bounded communication budget: the batched mode
+    # ships at most --comm-quota URLs per dispatch and parks the rest in the
+    # persistent outbox (repro.coordination; the ledger line prints the
+    # paper's bandwidth metric — URLs shipped per fetched page)
+    from repro.launch.crawl import main as crawl_main
+    print("\n-- launch.crawl --coordination batched --comm-quota 64 --")
+    crawl_main(["--steps", "8", "--domains", "8", "--capacity", "128",
+                "--fetch-batch", "8", "--coordination", "batched",
+                "--comm-quota", "64"])
+    print()
+
     # --- train on the crawl -------------------------------------------------
     lm_cfg = scaled(get_reduced("qwen2-1.5b"), dtype="float32")
     batches = list(lm_batches(urls, cfg, batch=4, seq_len=32,

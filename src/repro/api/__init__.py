@@ -4,6 +4,8 @@ API layering (DESIGN.md §11):
 
   kernels/registry.py        which implementation serves each hot kernel
   core/partitioner.py        which partitioning policy serves the stages
+  repro/ordering             which queue discipline ranks URLs
+  repro/coordination         which coordination mode handles foreign URLs
   core/crawler.py            the stable KERNEL-FACING layer: make_crawl_step /
                              make_spmd_crawler + the re-exported state types
                              (CrawlState, FetchReport, STATS, ...)

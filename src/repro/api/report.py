@@ -87,6 +87,16 @@ class CrawlReport:
             return {}
         return ordering_quality(self.urls, self.per_step, self.cfg)
 
+    @functools.cached_property
+    def comm(self) -> Dict[str, float]:
+        """The communication-budget ledger (repro/coordination/metrics.py):
+        URLs shipped / received / dropped / deferred by the coordination
+        mode, and the paper's bandwidth metric — shipped URLs per fetched
+        page. Zero-communication modes (firewall, crossover) report
+        ``comm_per_page == 0``."""
+        from repro.coordination.metrics import comm_ledger
+        return comm_ledger(self.stats, self.fetched)
+
     @property
     def steps(self) -> int:
         return len(self.per_step)

@@ -223,6 +223,20 @@ class CrawlConfig:
                                       # (repro.ordering registry; backlink = the
                                       # ranker's static linear blend; opic_url =
                                       # per-URL cash over the frontier columns)
+    coordination: str = "exchange"    # inter-process coordination mode at
+                                      # dispatch time (repro.coordination
+                                      # registry): "exchange" | "firewall" |
+                                      # "crossover" | "batched" — the classic
+                                      # parallel-crawler taxonomy; what a
+                                      # C-proc does with foreign URLs trades
+                                      # communication bandwidth against
+                                      # coverage (firewall), overlap
+                                      # (crossover), or latency (batched)
+    comm_quota: int = -1              # "batched" only: max URLs shipped per
+                                      # shard per dispatch (value-aware top-k
+                                      # picks what ships; the rest parks in
+                                      # the persistent outbox). -1 = unbounded
+                                      # (bit-identical URL flow to "exchange")
     slot_factor: int = 2              # frontier rows per domain (spare slots so
                                       # C4 rebalancing never merges queues)
     kernel_impl: str = "auto"         # frontier-select/bloom implementation:

@@ -1,0 +1,21 @@
+"""repro.coordination — the coordination-mode subsystem (DESIGN.md §14).
+
+The repo's FOURTH registry: ``CrawlConfig.coordination`` names a
+:class:`CoordinationPolicy` that owns what happens to foreign URLs at
+dispatch time — ship them (exchange), drop them (firewall), crawl them
+yourself (crossover), or ship a bounded top-k and park the rest in the
+persistent outbox (batched). Importing this package registers the
+built-ins.
+"""
+from repro.coordination.registry import (CoordinationPolicy, DispatchPlan,
+                                         coordinations, get_coordination,
+                                         register_coordination)
+from repro.coordination import policies  # noqa: F401  (registers built-ins)
+from repro.coordination.metrics import comm_ledger, ledger_line
+from repro.coordination.outbox import init_outbox, outbox_capacity
+
+__all__ = [
+    "CoordinationPolicy", "DispatchPlan", "coordinations",
+    "get_coordination", "register_coordination",
+    "comm_ledger", "ledger_line", "init_outbox", "outbox_capacity",
+]

@@ -1,0 +1,48 @@
+"""The COMMUNICATION-BUDGET LEDGER — the paper's bandwidth axis, measured.
+
+WebParF frames URL distribution as a four-way trade-off (overlap, coverage,
+quality, communication bandwidth); the first three have had metrics since
+the overlap/ordering benchmarks — this module supplies the fourth. All
+counters come from the crawl's own stat row (core/stages.STATS), summed by
+``repro.api.report.stats_dict``:
+
+  urls_shipped   — URLs handed to the all_to_all (``dispatch_sent``): the
+                   inter-process bandwidth actually spent.
+  urls_received  — URLs entering the local insert path (``dispatch_recv``;
+                   for zero-communication modes these are kept-local URLs).
+  urls_dropped   — URLs a coordination policy discarded (firewall's foreign
+                   drops, outbox overflow): the coverage paid for silence.
+  urls_deferred  — URLs parked in the outbox for a later dispatch
+                   (cumulative over rounds; a URL parked twice counts
+                   twice — it occupied budget-decision space twice).
+  comm_per_page  — shipped URLs per fetched page: the paper's communication
+                   overhead metric (Cho & Garcia-Molina report exchange
+                   mode at ~constant URLs exchanged per page downloaded;
+                   firewall/crossover sit at exactly 0).
+
+Surfaced as :attr:`repro.api.CrawlReport.comm` and raced mode x
+partitioning by benchmarks/overlap.py.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+
+def comm_ledger(stats: Dict[str, int], fetched: int) -> Dict[str, float]:
+    """Fold a run's stat counters into the communication ledger."""
+    shipped = int(stats.get("dispatch_sent", 0))
+    return dict(
+        urls_shipped=shipped,
+        urls_received=int(stats.get("dispatch_recv", 0)),
+        urls_dropped=int(stats.get("coord_dropped", 0)),
+        urls_deferred=int(stats.get("coord_deferred", 0)),
+        comm_per_page=shipped / max(int(fetched), 1),
+    )
+
+
+def ledger_line(comm: Dict[str, float]) -> str:
+    """One human line for drivers (launch/crawl.py, benchmarks)."""
+    return (f"{comm['urls_shipped']} URLs shipped "
+            f"({comm['comm_per_page']:.2f}/page), "
+            f"{comm['urls_dropped']} dropped, "
+            f"{comm['urls_deferred']} deferred")

@@ -1,0 +1,92 @@
+"""The per-shard URL OUTBOX — bounded-bandwidth coordination's carry buffer.
+
+BUbiNG-style crawlers bound their inter-agent URL traffic and batch what
+exceeds the budget for a later round; this module owns that buffer for the
+``batched`` coordination mode. The outbox is four ``CrawlState`` leaves
+shaped exactly like the staging buffer —
+
+    outbox_url (n_shards, B) uint32    outbox_val (n_shards, B) f32
+    outbox_src (n_shards, B) int32     outbox_n   (n_shards,)   int32
+
+with ``B = cfg.dispatch_capacity`` — so it checkpoints, restores, and
+shards with the rest of the crawl state for free. Parked entries keep their
+source-page domain and their conserved ordering value (counted by
+``repro.ordering.opic.total_cash``), and their DESTINATION is recomputed
+from the live domain->slot map at every retry: after a C4 rebalance a
+parked URL automatically re-routes to its domain's new owner, which is the
+outbox's whole migration story (staging works the same way).
+
+Lifecycle per dispatch (core/stages.dispatch_exchange, DESIGN.md §14):
+merge the parked entries ahead of the fresh staging batch (age order — a
+retry outranks a newcomer at equal value), let the policy pick what ships,
+then :func:`park` writes the deferred remainder back. Parking overflow
+beyond ``B`` refunds its value like any other drop.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CrawlConfig
+
+
+def outbox_capacity(cfg: CrawlConfig) -> int:
+    """One dispatch batch worth of carry — enough to retry a whole skipped
+    exchange without growing state superlinearly."""
+    return cfg.dispatch_capacity
+
+
+def init_outbox(cfg: CrawlConfig, n_shards: int) -> dict:
+    """Zeroed outbox leaves for ``CrawlState`` (every mode carries them;
+    only ``batched`` writes them)."""
+    B = outbox_capacity(cfg)
+    return dict(
+        outbox_url=jnp.zeros((n_shards, B), jnp.uint32),
+        outbox_src=jnp.zeros((n_shards, B), jnp.int32),
+        outbox_val=jnp.zeros((n_shards, B), jnp.float32),
+        outbox_n=jnp.zeros((n_shards,), jnp.int32),
+    )
+
+
+def merge_pool(state, su: jax.Array, ss: jax.Array, sv: jax.Array,
+               staged: jax.Array) -> Tuple[jax.Array, ...]:
+    """Prepend the parked outbox to the fresh staging batch.
+
+    Returns pool-aligned (u, src, val, staged', parked) where ``parked``
+    marks the outbox-origin prefix (used only for accounting)."""
+    ou, osrc = state.outbox_url[0], state.outbox_src[0]
+    ov, on = state.outbox_val[0], state.outbox_n[0]
+    parked = jnp.arange(ou.shape[0]) < on
+    u = jnp.concatenate([ou, su])
+    src = jnp.concatenate([osrc, ss])
+    val = jnp.concatenate([ov, sv])
+    pooled = jnp.concatenate([parked, staged])
+    return u, src, val, pooled, parked
+
+
+def park(u: jax.Array, src: jax.Array, val: jax.Array, defer: jax.Array,
+         B: int) -> Tuple[dict, jax.Array]:
+    """Pack the deferred items into a fresh outbox, pool order preserved
+    (parked retries stay ahead of this round's newcomers).
+
+    Returns (outbox leaf dict with a leading length-1 shard axis, fits) —
+    ``fits`` marks the deferred items that actually parked; the caller
+    refunds and counts the rest (``defer & ~fits``)."""
+    order = jnp.cumsum(defer.astype(jnp.int32)) - 1
+    fits = defer & (order < B)
+    # non-fitting items scatter into a trash cell (index B) so they can
+    # never collide with a real write (duplicate-index scatter order is
+    # undefined in XLA; all trash writes are 0, so even those agree)
+    pos = jnp.where(fits, order, B)
+
+    def put(vals, dt):
+        buf = jnp.zeros((B + 1,), dt)
+        return buf.at[pos].set(jnp.where(fits, vals, 0).astype(dt))[:B]
+
+    leaves = dict(outbox_url=put(u, jnp.uint32)[None],
+                  outbox_src=put(src, jnp.int32)[None],
+                  outbox_val=put(val, jnp.float32)[None],
+                  outbox_n=fits.sum().astype(jnp.int32)[None])
+    return leaves, fits

@@ -1,0 +1,88 @@
+"""The four built-in coordination modes (DESIGN.md §14).
+
+Each ``plan`` callable is traced inside the shard-mapped dispatch step and
+assigns every candidate-pool item exactly one fate (ship / keep / defer /
+drop / leftover-refund); the static flags on the policy decide which
+machinery the stage traces at all. See registry.py for the taxonomy and
+core/stages.dispatch_exchange for the consuming refactor.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.coordination.registry import (CoordinationPolicy, DispatchPlan,
+                                         register_coordination)
+
+
+def _zeros(like):
+    return jnp.zeros_like(like)
+
+
+def _exchange_plan(ctx, state, shard, u, src, val, dest, staged, valid):
+    """Ship everything staged to its predicted owner — the paper's C5
+    dispatcher, bit-for-bit (the all_to_all carries own-shard URLs too,
+    exactly as before the registry existed)."""
+    z = _zeros(valid)
+    return DispatchPlan(ship=valid, keep=z, defer=z, drop=z, foreign=z)
+
+
+def _firewall_plan(ctx, state, shard, u, src, val, dest, staged, valid):
+    """Keep own-partition URLs, drop foreign ones — zero communication.
+
+    The dropped URL's conserved ordering value refunds to the SOURCE page's
+    slot through the stage's generic refund path (local by construction —
+    the source page was fetched here), so firewalling loses coverage, never
+    cash. The coverage loss is the measurable cost (benchmarks/overlap.py).
+    """
+    own = dest == shard
+    z = _zeros(valid)
+    return DispatchPlan(ship=z, keep=valid & own, defer=z,
+                        drop=valid & ~own, foreign=z)
+
+
+def _crossover_plan(ctx, state, shard, u, src, val, dest, staged, valid):
+    """Keep everything, communicate nothing.
+
+    Foreign URLs are flagged so the dispatch stage parks them in a hashed
+    local row at the LOWEST priority bucket: the allocator only reaches
+    them once the local frontier runs dry (Cho & Garcia-Molina's cross-over
+    mode). Multiple shards may fetch the same URL — the measurable C1/C2
+    overlap cost (benchmarks/overlap.py)."""
+    z = _zeros(valid)
+    return DispatchPlan(ship=z, keep=valid, defer=z, drop=z,
+                        foreign=valid & (dest != shard))
+
+
+def _batched_plan(ctx, state, shard, u, src, val, dest, staged, valid):
+    """Bounded-bandwidth exchange: ship the top ``cfg.comm_quota`` staged
+    URLs by conserved value (stable tie-break = pool order, so parked
+    retries outrank equal-value newcomers), park the rest in the outbox.
+
+    ``comm_quota < 0`` lifts the bound — the shipped set is then exactly
+    the exchange mode's (bit-identical URL flow; tests/test_coordination.py
+    asserts it). A dead shard ships nothing but still parks, so its
+    discovered URLs survive to retry after a revive instead of being lost
+    with the staging buffer."""
+    quota = ctx.cfg.comm_quota
+    z = _zeros(valid)
+    if quota < 0:
+        ship = valid
+    else:
+        # value-aware top-k: rank valid items by value, descending; the
+        # double-argsort inverts the (stable) sort permutation into ranks
+        key = jnp.where(valid, val, -jnp.inf)
+        order = jnp.argsort(key, descending=True, stable=True)
+        rank = jnp.argsort(order)
+        ship = valid & (rank < quota)
+    return DispatchPlan(ship=ship, keep=z, defer=staged & ~ship, drop=z,
+                        foreign=z)
+
+
+EXCHANGE = register_coordination(CoordinationPolicy(
+    "exchange", True, False, False, _exchange_plan))
+FIREWALL = register_coordination(CoordinationPolicy(
+    "firewall", False, False, False, _firewall_plan))
+CROSSOVER = register_coordination(CoordinationPolicy(
+    "crossover", False, False, True, _crossover_plan))
+BATCHED = register_coordination(CoordinationPolicy(
+    "batched", True, True, False, _batched_plan))

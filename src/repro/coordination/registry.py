@@ -1,0 +1,112 @@
+"""COORDINATION-MODE REGISTRY — the repo's fourth named-policy table.
+
+Parallel crawlers coordinate in one of a few classic modes (Cho &
+Garcia-Molina's firewall / cross-over / exchange taxonomy, which WebParF
+builds on): what happens to a URL discovered by a process that does NOT own
+its partition? ``CrawlConfig.coordination`` names a registered
+:class:`CoordinationPolicy` that owns exactly that decision at dispatch
+time, the same way ``kernels/registry.py`` owns kernel implementations,
+``core/partitioner.py`` owns partitioning schemes, and ``repro/ordering``
+owns queue disciplines (DESIGN.md §14). The shipped modes:
+
+  exchange  — ship every staged URL to its predicted owner through the
+              batched all_to_all (the paper's C5 dispatcher; the default,
+              bit-identical to the pre-registry behavior).
+  firewall  — never communicate: keep own-partition URLs, DROP foreign ones
+              (their conserved ordering value refunds to the source page's
+              slot). Zero bandwidth, measurable coverage loss.
+  crossover — never communicate: keep foreign URLs TOO, parked in the
+              lowest priority bucket of a hashed local row so they are
+              fetched only once the local frontier runs dry. Zero
+              bandwidth, measurable C1/C2 overlap.
+  batched   — bounded bandwidth: at most ``CrawlConfig.comm_quota`` URLs
+              ship per dispatch (value-aware top-k picks what ships);
+              the overflow parks in a persistent per-shard OUTBOX
+              (``CrawlState.outbox_*``) and retries next dispatch.
+
+Every mode preserves the stages' deliver-or-refund value contract: a staged
+URL's piggybacked ordering cash is shipped, parked (outbox), or refunded —
+never dropped — so total OPIC cash stays conserved under all four modes
+(tests/test_invariants.py property-checks this).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+
+
+class DispatchPlan(NamedTuple):
+    """One dispatch round's fate assignment over the candidate pool.
+
+    The pool is the flattened staging buffer (plus the parked outbox for
+    ``uses_outbox`` policies); every mask is pool-aligned. ``ship``,
+    ``keep`` and ``defer`` must be disjoint; ``ship``/``keep`` select from
+    the valid (staged & alive) items, ``defer`` from staged items (a dead
+    shard may still park). Anything staged that ends up in none of them —
+    including ``drop`` and all_to_all bucket overflow — refunds its value
+    to the source page's row (the stage's generic refund path).
+    """
+    ship: jax.Array     # (N,) bool — transmit through the all_to_all
+    keep: jax.Array     # (N,) bool — process locally, zero communication
+    defer: jax.Array    # (N,) bool — park in the outbox for a later dispatch
+    drop: jax.Array     # (N,) bool — discard now (refunded + counted)
+    foreign: jax.Array  # (N,) bool — kept items this shard does NOT own
+                        # (crossover: placed in a hashed local row, lowest
+                        # priority bucket)
+
+
+class CoordinationPolicy(NamedTuple):
+    """One coordination mode, resolvable by name from ``cfg.coordination``.
+
+    The three booleans are STATIC (python) flags — they decide what the
+    dispatch stage traces (an all_to_all, the outbox read/write, the
+    foreign-placement lanes), so a mode that never communicates compiles to
+    a collective-free HLO rather than a masked exchange.
+
+      communicates — the dispatch step contains the all_to_all.
+      uses_outbox  — the candidate pool includes the parked outbox, and
+                     deferred items are written back to it.
+      keeps_foreign— ``plan.foreign`` may be nonzero; the dispatch stage
+                     traces the hashed-row placement + bucket-0 score clamp.
+      plan         — (ctx, state, shard, u, src, val, dest, staged, valid)
+                     -> DispatchPlan, traced inside the shard-mapped step.
+    """
+    name: str
+    communicates: bool
+    uses_outbox: bool
+    keeps_foreign: bool
+    plan: Callable
+
+
+_POLICIES: Dict[str, CoordinationPolicy] = {}
+
+
+def register_coordination(policy: CoordinationPolicy) -> CoordinationPolicy:
+    """Register under ``policy.name`` (error on conflicting re-use)."""
+    if policy.name in _POLICIES and _POLICIES[policy.name] is not policy:
+        raise ValueError(
+            f"coordination policy {policy.name!r} registered twice")
+    _POLICIES[policy.name] = policy
+    return policy
+
+
+def coordinations() -> Tuple[str, ...]:
+    _ensure()
+    return tuple(sorted(_POLICIES))
+
+
+def get_coordination(name: str) -> CoordinationPolicy:
+    """Resolve a ``cfg.coordination`` string to its registered policy."""
+    _ensure()
+    if name not in _POLICIES:
+        raise KeyError(f"unknown coordination policy {name!r}; "
+                       f"registered: {tuple(sorted(_POLICIES))}")
+    return _POLICIES[name]
+
+
+def _ensure() -> None:
+    """Built-ins register at package import (repro/coordination/__init__
+    pulls in policies.py); callers reaching the registry through this module
+    alone trigger that import here."""
+    import repro.coordination  # noqa: F401  (registers the built-ins)

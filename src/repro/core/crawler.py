@@ -12,7 +12,11 @@ crawling process). The step itself is a PIPELINE of typed stages
 
 Batching the exchange is the paper's C5 claim; the interval is a config knob
 and the dispatch is a SEPARATE jitted variant (`step_dispatch`) so the
-collective only appears in the HLO of the steps that actually exchange.
+collective only appears in the HLO of the steps that actually exchange —
+and only when the COORDINATION mode communicates at all: what the dispatch
+does with foreign URLs (ship / drop / keep / park under a bandwidth quota)
+is the fourth registry, ``repro.coordination``, resolved from
+``CrawlConfig.coordination`` (DESIGN.md §14).
 
 Three partitioning policies run through the same step (DESIGN.md §9):
   webparf  — domain-partitioned, content-informed canonicalization + routing

@@ -97,11 +97,16 @@ def _rebase_fifo(f: Frontier, incoming: jax.Array) -> Frontier:
 
 
 def select_arrays(url: jax.Array, priority: jax.Array, valid: jax.Array,
-                  *, k: int) -> Tuple[jax.Array, ...]:
+                  *, k: int, return_idx: bool = False) -> Tuple[jax.Array, ...]:
     """Pure-XLA top-k pop on raw row arrays — the "ref" implementation the
     kernel registry dispatches to (kernels/frontier_select registers it).
 
-    Returns (urls (R,k), priorities (R,k), mask (R,k), priority', valid')."""
+    Returns (urls (R,k), priorities (R,k), mask (R,k), priority', valid');
+    with ``return_idx`` also the popped cell indices (R,k) int32 — the
+    column each pop came from, which url-lane orderings need to harvest the
+    cell-aligned value table without recomputing the top-k (DESIGN.md §13).
+    Indices in masked-out lanes point at whatever NEG cell the top-k
+    surfaced — callers must gate on the mask."""
     masked = jnp.where(valid, priority, NEG)
     pri, idx = lax.top_k(masked, k)                      # (R, k)
     got = jnp.take_along_axis(url, idx, axis=1)
@@ -111,20 +116,29 @@ def select_arrays(url: jax.Array, priority: jax.Array, valid: jax.Array,
     new_valid = valid.at[rows, idx].set(
         jnp.where(mask, False, jnp.take_along_axis(valid, idx, axis=1)))
     new_pri = priority.at[rows, idx].set(jnp.where(mask, NEG, pri))
+    if return_idx:
+        return got, pri, mask, new_pri, new_valid, idx.astype(jnp.int32)
     return got, pri, mask, new_pri, new_valid
 
 
-def select(f: Frontier, k: int, *, impl: str = "ref"
-           ) -> Tuple[jax.Array, jax.Array, jax.Array, Frontier]:
+def select(f: Frontier, k: int, *, impl: str = "ref",
+           return_idx: bool = False):
     """Pop the top-k URLs of every row (the URL allocator's read).
 
     ``impl`` picks the implementation via the kernel registry ("ref" |
     "pallas" | "interpret" | "auto" — kernels/registry.py). Returns
-    (urls (R,k), priorities (R,k), mask (R,k), new frontier)."""
+    (urls (R,k), priorities (R,k), mask (R,k), new frontier); with
+    ``return_idx`` also the popped cell indices (see ``select_arrays`` —
+    ops.select recomputes them outside the kernel for implementations that
+    don't surface them natively)."""
     from repro.kernels.frontier_select.ops import select as _kernel_select
-    got, pri, mask, new_pri, new_valid = _kernel_select(
-        f.url, f.priority, f.valid, k=k, impl=impl)
-    return got, pri, mask, f._replace(valid=new_valid, priority=new_pri)
+    out = _kernel_select(f.url, f.priority, f.valid, k=k, impl=impl,
+                         return_idx=return_idx)
+    got, pri, mask, new_pri, new_valid = out[:5]
+    fr = f._replace(valid=new_valid, priority=new_pri)
+    if return_idx:
+        return got, pri, mask, fr, out[5]
+    return got, pri, mask, fr
 
 
 def _plan_insert(f: Frontier, urls: jax.Array, scores: jax.Array,

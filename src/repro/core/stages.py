@@ -25,6 +25,16 @@ decision (ownership split, dispatch routing, local row placement) resolves
 through the policy registry (core/partitioner.py) via ``ctx.policy`` =
 ``get_policy(CrawlConfig.partitioning)`` — no policy string branches here.
 
+Coordination is the fourth registry (repro/coordination, DESIGN.md §14):
+``ctx.coord`` = ``get_coordination(CrawlConfig.coordination)`` owns what
+``dispatch_exchange`` does with each staged URL — ship it to its predicted
+owner (exchange, the default), keep or drop it locally without
+communicating (crossover / firewall), or ship a bounded value-aware top-k
+and park the rest in the persistent ``CrawlState.outbox_*`` buffer
+(batched, ``CrawlConfig.comm_quota``). The stage traces only the machinery
+the mode's static flags ask for, so zero-communication modes compile
+without the all_to_all.
+
 URL ordering is the third registry (repro/ordering, DESIGN.md §12):
 ``ctx.score_fn`` is produced by the ordering policy named in
 ``CrawlConfig.ordering`` and is state-aware — ``score_fn(urls, cfg, state)``
@@ -68,7 +78,8 @@ from repro.core import webgraph as W
 STATS = ("fetched", "fetch_own", "fetch_foreign", "discovered", "dedup_exact",
          "dedup_bloom", "staging_drop", "frontier_drop", "dispatch_sent",
          "dispatch_recv", "dispatch_rounds", "revived",
-         "politeness_deferred", "revisit_enqueued")
+         "politeness_deferred", "revisit_enqueued",
+         "coord_dropped", "coord_deferred")
 NSTAT = len(STATS)
 SIDX = {n: i for i, n in enumerate(STATS)}
 
@@ -94,6 +105,12 @@ class CrawlState(NamedTuple):
     staging_src: jax.Array       # (n_shards, S) int32 source-page domain
     staging_val: jax.Array       # (n_shards, S) f32 piggybacked URL values
     staging_n: jax.Array         # (n_shards,) int32
+    # the batched coordination mode's persistent carry buffer
+    # (repro/coordination/outbox.py) — zeros under the other modes
+    outbox_url: jax.Array        # (n_shards, B) uint32
+    outbox_src: jax.Array        # (n_shards, B) int32
+    outbox_val: jax.Array        # (n_shards, B) f32
+    outbox_n: jax.Array          # (n_shards,) int32
     stats: jax.Array             # (n_shards, NSTAT) int32
     # replicated
     slot_of_domain: jax.Array    # (n_domains,)
@@ -118,6 +135,9 @@ class StageContext(NamedTuple):
     url_lane: bool = False       # ordering keeps a frontier-cell-aligned
                                  # per-URL value lane in order_state[:, 2:]
                                  # (OrderingPolicy.url_lane — opic_url)
+    coord: "object" = None       # resolved from cfg.coordination
+                                 # (repro.coordination registry — the
+                                 # dispatch-time foreign-URL policy)
 
 
 class StepCarry(NamedTuple):
@@ -194,6 +214,7 @@ def init_state(cfg: CrawlConfig, n_shards: int) -> CrawlState:
     _, bloom = DD.probe_insert(bloom, f.url, f.valid, k=cfg.bloom_hashes,
                                impl=cfg.kernel_impl)
     S = cfg.dispatch_capacity
+    from repro.coordination.outbox import init_outbox
     from repro.ordering.policies import get_ordering
     return CrawlState(
         f_url=f.url, f_pri=f.priority, f_valid=f.valid, f_arrival=f.arrival,
@@ -205,6 +226,7 @@ def init_state(cfg: CrawlConfig, n_shards: int) -> CrawlState:
         staging_src=jnp.zeros((n_shards, S), jnp.int32),
         staging_val=jnp.zeros((n_shards, S), jnp.float32),
         staging_n=jnp.zeros((n_shards,), jnp.int32),
+        **init_outbox(cfg, n_shards),
         stats=jnp.zeros((n_shards, NSTAT), jnp.int32),
         slot_of_domain=dm.slot_of_domain,
         shard_alive=dm.shard_alive,
@@ -220,6 +242,7 @@ def state_specs(axes) -> CrawlState:
         f_inserted=row, f_rebased=row, bloom_bits=row, slot_domain=row,
         order_state=row,
         staging_url=row, staging_src=row, staging_val=row, staging_n=row,
+        outbox_url=row, outbox_src=row, outbox_val=row, outbox_n=row,
         stats=row,
         slot_of_domain=P(), shard_alive=P(), step=P(),
     )
@@ -231,6 +254,7 @@ def make_context(cfg: CrawlConfig, *, n_shards: int, axes,
     """``score_fn`` override (legacy ``(urls, cfg)`` signature, e.g. a learned
     scorer) wins over the registry; by default ``cfg.ordering`` names the
     :class:`repro.ordering.OrderingPolicy` that produces the scorer."""
+    from repro.coordination import get_coordination
     from repro.ordering.policies import as_score_fn, get_ordering
     axes_t = axes if isinstance(axes, tuple) else (axes,)
     r_local = cfg.n_slots // n_shards
@@ -244,7 +268,8 @@ def make_context(cfg: CrawlConfig, *, n_shards: int, axes,
         k_row=max(1, cfg.fetch_batch // r_local), S=S,
         cap_ex=max(8, -(-S // n_shards) * 2), impl=cfg.kernel_impl,
         policy=PT.get_policy(cfg.partitioning), ordering=ordering,
-        url_lane=bool(getattr(ordering, "url_lane", False)))
+        url_lane=bool(getattr(ordering, "url_lane", False)),
+        coord=get_coordination(cfg.coordination))
 
 
 # ---------------------------------------------------------------------------
@@ -265,13 +290,14 @@ def allocate(ctx: StageContext, state: CrawlState,
     fr = frontier_view(state)
 
     if ctx.url_lane:
-        # per-URL cash lane: resolve the cells the select is ABOUT to pop.
-        # Priorities are unique per row among valid cells (encode_priority's
-        # strictly-increasing arrival counter + the FIFO rebase), so this
-        # top_k resolves the same cells every select implementation pops.
-        idx = lax.top_k(jnp.where(fr.valid, fr.priority, F.NEG), ctx.k_row)[1]
-
-    urls, pri, pre_sel, fr = F.select(fr, ctx.k_row, impl=ctx.impl)
+        # per-URL cash lane: the select itself reports which cells it popped
+        # (the extended frontier_select contract — ref/interpret surface the
+        # indices natively; ops.select recomputes them for the compiled
+        # pallas path)
+        urls, pri, pre_sel, fr, idx = F.select(fr, ctx.k_row, impl=ctx.impl,
+                                               return_idx=True)
+    else:
+        urls, pri, pre_sel, fr = F.select(fr, ctx.k_row, impl=ctx.impl)
     r_local = urls.shape[0]
 
     url_cash, table, order_state = None, None, state.order_state
@@ -393,49 +419,94 @@ def extract_stage(ctx: StageContext, state: CrawlState, carry: StepCarry
 
 def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
                       ) -> Tuple[CrawlState, StepCarry, StatsDelta]:
-    """URL dispatcher (C5): predict each staged URL's owner, all_to_all the
-    per-destination buckets, dedup what arrived (exact + Bloom), and insert
-    the survivors into the local frontier rows."""
+    """URL dispatcher (C5): predict each staged URL's owner, let the
+    COORDINATION policy (``ctx.coord``, repro/coordination, DESIGN.md §14)
+    assign every candidate a fate — ship through the all_to_all, keep
+    locally without communicating, defer to the outbox, or drop — then
+    dedup what arrived (exact + Bloom) and insert the survivors into the
+    local frontier rows. Under the default ``exchange`` mode everything
+    staged ships, bit-for-bit the original dispatcher."""
     cfg = ctx.cfg
     S, n_shards = ctx.S, ctx.n_shards
     shard = carry.shard
+    coord = ctx.coord
     su, ss, n = state.staging_url[0], state.staging_src[0], state.staging_n[0]
     sv = state.staging_val[0]
     r_slots = state.slot_domain.shape[0]               # local row count
-    # a dead process sends nothing (its staged URLs are lost — the cost
-    # of failure the paper's rebalancing bounds)
+
+    # the candidate pool: this interval's staging batch, preceded by the
+    # parked outbox for modes that carry one (batched retries age first)
     staged = jnp.arange(S) < n
+    if coord.uses_outbox:
+        from repro.coordination import outbox as OB
+        u, src, val, staged, _parked = OB.merge_pool(state, su, ss, sv,
+                                                     staged)
+    else:
+        u, src, val = su, ss, sv
+    # a dead process sends nothing (its staged URLs are lost — the cost
+    # of failure the paper's rebalancing bounds; the batched mode instead
+    # parks them for a post-revive retry)
     valid = staged & state.shard_alive[shard]
 
-    # predict destination domain / shard (routing is the policy's call)
-    pred = CLS.predict_domain(su, ss, cfg, step=state.step,
+    # predict destination domain / shard (routing is the partitioning
+    # policy's call; outbox retries re-route through the LIVE domain map,
+    # which is how parked URLs follow a C4 rebalance)
+    pred = CLS.predict_domain(u, src, cfg, step=state.step,
                               accuracy=ctx.classify_accuracy)
-    dest = ctx.policy.route(cfg, state, n_shards, su, pred, state.step)
+    dest = ctx.policy.route(cfg, state, n_shards, u, pred, state.step)
 
-    payload = jnp.stack([su, pred.astype(jnp.uint32),
-                         valid.astype(jnp.uint32),
-                         lax.bitcast_convert_type(sv, jnp.uint32)],
-                        axis=-1)                          # (S, 4)
-    buckets, bmask, dropped, sent = RT.pack_buckets(
-        payload, dest, n_shards, ctx.cap_ex, valid=valid, return_keep=True)
-    delta = {"staging_drop": dropped, "dispatch_sent": valid.sum(),
-             "dispatch_rounds": jnp.ones((), jnp.int32)}
+    # the coordination decision: ship / keep / defer / drop per item
+    plan = coord.plan(ctx, state, shard, u, src, val, dest, staged, valid)
+    delta = {"dispatch_sent": plan.ship.sum(),
+             "dispatch_rounds": jnp.ones((), jnp.int32),
+             "coord_dropped": plan.drop.sum()}
 
-    # value-channel conservation (sender half): anything staged but NOT sent
-    # (dead shard, bucket overflow) refunds its value to the source page's
-    # own row rather than vanishing with the URL
-    unsent = staged & ~sent
-    own_slot = state.slot_of_domain[jnp.clip(ss, 0, cfg.n_domains - 1)]
+    parked_ok = jnp.zeros_like(staged)
+    outbox_leaves = {}
+    if coord.uses_outbox:
+        outbox_leaves, parked_ok = OB.park(u, src, val, plan.defer,
+                                           OB.outbox_capacity(cfg))
+        delta["coord_deferred"] = parked_ok.sum()
+        delta["coord_dropped"] = (delta["coord_dropped"]
+                                  + (plan.defer & ~parked_ok).sum())
+
+    if coord.communicates:
+        payload = jnp.stack([u, pred.astype(jnp.uint32),
+                             plan.ship.astype(jnp.uint32),
+                             lax.bitcast_convert_type(val, jnp.uint32)],
+                            axis=-1)                      # (N, 4)
+        buckets, bmask, dropped, sent = RT.pack_buckets(
+            payload, dest, n_shards, ctx.cap_ex, valid=plan.ship,
+            return_keep=True)
+        delta["staging_drop"] = dropped
+        recv = RT.exchange(buckets, ctx.axes)          # (n_shards, cap_ex, 4)
+        r_u = recv[..., 0].reshape(-1)
+        r_pred = recv[..., 1].reshape(-1).astype(jnp.int32)
+        r_has = recv[..., 2].reshape(-1) > 0
+        r_val = lax.bitcast_convert_type(recv[..., 3], jnp.float32
+                                         ).reshape(-1)
+        r_foreign = jnp.zeros_like(r_has)
+    else:
+        # zero-communication modes: the "received" set is the kept slice of
+        # the local pool — no collective appears in this mode's HLO
+        sent = jnp.zeros_like(staged)
+        r_u = jnp.where(plan.keep, u, 0)
+        r_pred = jnp.where(plan.keep, pred, 0)
+        r_has = plan.keep
+        r_val = jnp.where(plan.keep, val, 0.0)
+        r_foreign = plan.foreign
+
+    # value-channel conservation (sender half): anything staged that was
+    # neither sent (dead shard, bucket overflow) nor kept, parked, or
+    # already counted refunds its value to the source page's own row rather
+    # than vanishing with the URL — firewall's foreign drops land here too
+    leftover = staged & ~sent & ~plan.keep & ~parked_ok
+    own_slot = state.slot_of_domain[jnp.clip(src, 0, cfg.n_domains - 1)]
     own_row = jnp.clip(own_slot - shard * r_slots, 0, r_slots - 1)
     order_state = state.order_state.at[
-        jnp.where(unsent, own_row, r_slots), 0].add(
-        jnp.where(unsent, sv, 0.0), mode="drop")
+        jnp.where(leftover, own_row, r_slots), 0].add(
+        jnp.where(leftover, val, 0.0), mode="drop")
 
-    recv = RT.exchange(buckets, ctx.axes)              # (n_shards, cap_ex, 4)
-    r_u = recv[..., 0].reshape(-1)
-    r_pred = recv[..., 1].reshape(-1).astype(jnp.int32)
-    r_has = recv[..., 2].reshape(-1) > 0
-    r_val = lax.bitcast_convert_type(recv[..., 3], jnp.float32).reshape(-1)
     r_m = r_has
     delta["dispatch_recv"] = r_m.sum()
 
@@ -446,20 +517,29 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
 
     # local row for each received URL (the policy's placement decision)
     row, ok = ctx.policy.local_row(cfg, state, shard, r_slots, r_u, r_pred)
+    if coord.keeps_foreign:
+        # crossover: a kept-foreign URL has no local owner row — park it in
+        # a hashed local row instead of rejecting it
+        hrow = (W.hash2(r_u, 63) % jnp.uint32(r_slots)).astype(jnp.int32)
+        row = jnp.where(r_foreign & ~ok, hrow, row)
+        ok = ok | (r_foreign & r_has)
     r_m = r_m & ok
 
-    M = min(ctx.cap_ex * n_shards, cfg.frontier_capacity)
+    M = min(r_u.shape[0], cfg.frontier_capacity)
     if ctx.url_lane:
         # per-URL delivery: the value must land in the exact cell its URL
         # wins in the frontier, so it travels THROUGH the per-row bucketing;
         # items that never reach a bucket (exact-dup, unowned, bucket
         # overflow) refund to the receiving row's slot cash here
+        lanes = [r_u, lax.bitcast_convert_type(r_val, jnp.uint32)]
+        if coord.keeps_foreign:
+            lanes.append(r_foreign.astype(jnp.uint32))
         rbp, rbmask, rdrop, rkeep = RT.pack_buckets(
-            jnp.stack([r_u, lax.bitcast_convert_type(r_val, jnp.uint32)],
-                      axis=-1),
+            jnp.stack(lanes, axis=-1),
             row, r_slots, M, valid=r_m, return_keep=True)
         rb = rbp[..., 0]                               # (r_slots, M)
         rv = lax.bitcast_convert_type(rbp[..., 1], jnp.float32)
+        rbf = rbp[..., 2] > 0 if coord.keeps_foreign else None
         lost = r_has & ~rkeep
         order_state = order_state.at[
             jnp.where(lost, row, r_slots), 0].add(
@@ -473,9 +553,12 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
             jnp.where(r_has, r_val, 0.0), mode="drop")
 
         # bucket per local row, Bloom-dedup, insert into the frontier
-        rb, rbmask, rdrop = RT.pack_buckets(r_u[:, None], row, r_slots, M,
-                                            valid=r_m)
-        rb = rb[..., 0]                                # (r_slots, M)
+        lanes = ([r_u, r_foreign.astype(jnp.uint32)] if coord.keeps_foreign
+                 else [r_u])
+        rbp, rbmask, rdrop = RT.pack_buckets(
+            jnp.stack(lanes, axis=-1), row, r_slots, M, valid=r_m)
+        rb = rbp[..., 0]                               # (r_slots, M)
+        rbf = rbp[..., 1] > 0 if coord.keeps_foreign else None
     delta["frontier_drop"] = rdrop
 
     bloom = DD.Bloom(state.bloom_bits, cfg.bloom_bits_log2)
@@ -508,6 +591,13 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
         # (scatter_cash_cells inside insert_valued); frontier-overflow drops
         # are refunded by insert_valued itself
         scores = ctx.score_fn(rb, cfg, state, val=rv)
+        if rbf is not None:
+            # crossover: kept-foreign URLs enter at the lowest priority
+            # bucket — fetched only once the local frontier runs dry (the
+            # per-dispatch rescore below may later re-rank them with the
+            # rest of the queue; the entry discipline is what the mode
+            # specifies)
+            scores = jnp.where(rbf, 0.0, scores)
         fr, table, ins_refund = F.insert_valued(
             fr, table, rb, scores, fresh, jnp.where(fresh, rv, 0.0),
             n_buckets=cfg.n_priority_buckets, impl=ctx.impl)
@@ -520,6 +610,10 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
                        n_buckets=cfg.n_priority_buckets)
     else:
         scores = ctx.score_fn(rb, cfg, state)
+        if rbf is not None:
+            # crossover: kept-foreign URLs enter at the lowest priority
+            # bucket — fetched only once the local frontier runs dry
+            scores = jnp.where(rbf, 0.0, scores)
         fr = F.insert(fr, rb, scores, fresh, n_buckets=cfg.n_priority_buckets)
 
     state = with_frontier(state, fr)._replace(
@@ -527,7 +621,8 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
         staging_url=jnp.zeros_like(state.staging_url),
         staging_src=jnp.zeros_like(state.staging_src),
         staging_val=jnp.zeros_like(state.staging_val),
-        staging_n=jnp.zeros_like(state.staging_n))
+        staging_n=jnp.zeros_like(state.staging_n),
+        **outbox_leaves)
     return state, carry, delta
 
 

@@ -20,7 +20,8 @@ NEG = -3e38
 
 
 def _kernel(url_ref, pri_ref, valid_ref, sel_url_ref, sel_pri_ref,
-            sel_mask_ref, pri_out_ref, valid_out_ref, *, k: int):
+            sel_mask_ref, pri_out_ref, valid_out_ref, *idx_out_ref,
+            k: int):
     pri = jnp.where(valid_ref[0], pri_ref[0], NEG)       # (C,) f32
     urls = url_ref[0]
     C = pri.shape[0]
@@ -34,6 +35,10 @@ def _kernel(url_ref, pri_ref, valid_ref, sel_url_ref, sel_pri_ref,
         sel_url_ref[0, j] = jnp.where(ok, urls[jnp.minimum(idx, C - 1)], 0)
         sel_pri_ref[0, j] = m
         sel_mask_ref[0, j] = ok
+        if idx_out_ref:
+            # popped cell index (extended contract; masked lanes are
+            # unspecified by contract — clamp keeps them gatherable)
+            idx_out_ref[0][0, j] = jnp.minimum(idx, C - 1)
         hit = (iota == idx) & ok
         pri = jnp.where(hit, NEG, pri)
         valid_new = valid_new & ~hit
@@ -41,28 +46,33 @@ def _kernel(url_ref, pri_ref, valid_ref, sel_url_ref, sel_pri_ref,
     valid_out_ref[0] = valid_new
 
 
-def frontier_select(url, pri, valid, *, k: int, interpret: bool = False):
+def frontier_select(url, pri, valid, *, k: int, interpret: bool = False,
+                    return_idx: bool = False):
     """url/pri/valid: (R, C). Returns (sel_url, sel_pri, sel_mask (R,k),
-    pri', valid')."""
+    pri', valid') — plus the popped cell indices (R, k) int32 when
+    ``return_idx`` (the extended contract; exercised through the
+    "interpret" registration — flipping it on for the COMPILED pallas path
+    awaits TPU validation, see ROADMAP)."""
     R, C = url.shape
     kernel = functools.partial(_kernel, k=k)
+    k_spec = pl.BlockSpec((1, k), lambda r: (r, 0))
+    c_spec = pl.BlockSpec((1, C), lambda r: (r, 0))
+    out_specs = [k_spec, k_spec, k_spec, c_spec, c_spec]
+    out_shape = [
+        jax.ShapeDtypeStruct((R, k), url.dtype),
+        jax.ShapeDtypeStruct((R, k), jnp.float32),
+        jax.ShapeDtypeStruct((R, k), jnp.bool_),
+        jax.ShapeDtypeStruct((R, C), jnp.float32),
+        jax.ShapeDtypeStruct((R, C), jnp.bool_),
+    ]
+    if return_idx:
+        out_specs.append(k_spec)
+        out_shape.append(jax.ShapeDtypeStruct((R, k), jnp.int32))
     return pl.pallas_call(
         kernel,
         grid=(R,),
-        in_specs=[pl.BlockSpec((1, C), lambda r: (r, 0))] * 3,
-        out_specs=[
-            pl.BlockSpec((1, k), lambda r: (r, 0)),
-            pl.BlockSpec((1, k), lambda r: (r, 0)),
-            pl.BlockSpec((1, k), lambda r: (r, 0)),
-            pl.BlockSpec((1, C), lambda r: (r, 0)),
-            pl.BlockSpec((1, C), lambda r: (r, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((R, k), url.dtype),
-            jax.ShapeDtypeStruct((R, k), jnp.float32),
-            jax.ShapeDtypeStruct((R, k), jnp.bool_),
-            jax.ShapeDtypeStruct((R, C), jnp.float32),
-            jax.ShapeDtypeStruct((R, C), jnp.bool_),
-        ],
+        in_specs=[c_spec] * 3,
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(url, pri, valid)

@@ -2,11 +2,23 @@
 
 Dispatch goes through kernels/registry.py — this module only registers the
 implementations and exposes the jitted entry point.
+
+Extended contract (DESIGN.md §13 sharp edge): ``select(..., return_idx=True)``
+additionally returns the popped cell indices (R, k) int32, so url-lane
+orderings harvest their frontier-cell-aligned value table from the select
+itself instead of recomputing its top-k. "ref" and "interpret" surface the
+indices natively; the COMPILED pallas path stays on the original 5-output
+contract (flipping its extra output block on awaits TPU validation —
+ROADMAP), so this wrapper recomputes the indices for it from the pre-pop
+arrays — exactly the computation the caller used to do.
 """
 from functools import partial
 
 import jax
+import jax.numpy as jnp
+from jax import lax
 
+from repro.core.frontier import NEG
 from repro.kernels import registry
 from repro.kernels.frontier_select.frontier_select import frontier_select
 from repro.kernels.frontier_select.ref import select_ref
@@ -17,9 +29,27 @@ registry.register("frontier_select", "pallas",
 registry.register("frontier_select", "interpret",
                   partial(frontier_select, interpret=True))
 
+# implementations that honor return_idx themselves
+_IDX_NATIVE = ("ref", "interpret")
 
-@partial(jax.jit, static_argnames=("k", "impl"))
-def select(url, pri, valid, *, k: int, impl: str = "ref"):
+
+@partial(jax.jit, static_argnames=("k", "impl", "return_idx"))
+def select(url, pri, valid, *, k: int, impl: str = "ref",
+           return_idx: bool = False):
     """url/pri/valid: (R, C). Returns (sel_url, sel_pri, sel_mask (R,k),
-    pri', valid')."""
-    return registry.dispatch("frontier_select", impl, url, pri, valid, k=k)
+    pri', valid'[, popped_idx (R,k) int32])."""
+    if not return_idx:
+        return registry.dispatch("frontier_select", impl, url, pri, valid,
+                                 k=k)
+    resolved = registry.resolve_impl("frontier_select", impl)
+    if resolved in _IDX_NATIVE:
+        return registry.dispatch("frontier_select", resolved, url, pri,
+                                 valid, k=k, return_idx=True)
+    # fallback: recompute the cells the kernel is about to pop. Priorities
+    # are unique per row among valid cells (encode_priority's strictly
+    # increasing arrival counter + the FIFO rebase), so this top_k resolves
+    # the same cells every select implementation pops.
+    idx = lax.top_k(jnp.where(valid, pri, NEG), k)[1].astype(jnp.int32)
+    out = registry.dispatch("frontier_select", resolved, url, pri, valid,
+                            k=k)
+    return (*out, idx)

@@ -1,6 +1,11 @@
-"""Oracle: core/frontier's pure-XLA pop IS the reference for the kernel."""
+"""Oracle: core/frontier's pure-XLA pop IS the reference for the kernel.
+
+The ref impl surfaces popped cell indices natively (``return_idx`` — the
+extended frontier_select contract url-lane orderings use to harvest their
+cell-aligned value table without recomputing the top-k).
+"""
 from repro.core.frontier import select_arrays
 
 
-def select_ref(url, pri, valid, *, k: int):
-    return select_arrays(url, pri, valid, k=k)
+def select_ref(url, pri, valid, *, k: int, return_idx: bool = False):
+    return select_arrays(url, pri, valid, k=k, return_idx=return_idx)

@@ -37,6 +37,16 @@ def main(argv=None):
                          "(repro.ordering registry; opic = stateful "
                          "importance estimation, opic_url = per-URL cash "
                          "over the frontier columns)")
+    from repro.coordination import coordinations
+    ap.add_argument("--coordination", default="exchange",
+                    choices=list(coordinations()),
+                    help="inter-process coordination mode at dispatch time "
+                         "(repro.coordination registry; firewall/crossover "
+                         "= zero communication, batched = --comm-quota "
+                         "URLs per dispatch with outbox carry)")
+    ap.add_argument("--comm-quota", type=int, default=-1, metavar="Q",
+                    help="batched mode: max URLs shipped per shard per "
+                         "dispatch (-1 = unbounded)")
     ap.add_argument("--politeness", type=int, default=-1, metavar="N",
                     help="cap fetches per domain queue per step at N "
                          "(stages.make_politeness_stage)")
@@ -61,7 +71,8 @@ def main(argv=None):
                  dispatch_interval=args.dispatch_interval,
                  bloom_bits_log2=16, dispatch_capacity=1024,
                  url_space_log2=24, partitioning=args.partitioning,
-                 ordering=args.ordering, kernel_impl=args.kernel_impl)
+                 ordering=args.ordering, kernel_impl=args.kernel_impl,
+                 coordination=args.coordination, comm_quota=args.comm_quota)
     from repro.core import stages as ST
     extra = []
     if args.politeness >= 0:
@@ -73,7 +84,8 @@ def main(argv=None):
                         extra_stages=extra)
     from repro.kernels import registry
     print(f"{args.partitioning}: {args.domains} domains over "
-          f"{sess.n_shards} shards, ordering={args.ordering} (kernels: "
+          f"{sess.n_shards} shards, ordering={args.ordering}, "
+          f"coordination={args.coordination} (kernels: "
           f"{registry.resolve_impl('frontier_select', cfg.kernel_impl)})")
 
     # C4 controls fire between run segments, at their exact step (fail
@@ -119,6 +131,9 @@ def main(argv=None):
           f" ({100 * ov['content_dup']:.2f}%)")
     print(f"C5 exchange: {sd['dispatch_rounds']} rounds, "
           f"{sd['dispatch_sent']} URLs sent")
+    from repro.coordination import comm_ledger, ledger_line
+    print(f"coordination[{args.coordination}]: "
+          f"{ledger_line(comm_ledger(sd, len(urls)))}")
     from repro.ordering import ordering_quality
     per_step = np.concatenate([r.per_step for r in reports])
     oq = ordering_quality(urls, per_step, cfg)

@@ -134,15 +134,20 @@ OPIC = register_ordering(OrderingPolicy(
 
 def total_cash(state) -> float:
     """Total OPIC cash in the system: slot cash, the per-URL lane when the
-    ordering keeps one (``opic_url`` — order_state columns 2:), and cash in
-    transit in the staging buffers. Conserved (up to f32 rounding in the
-    spend split) across steps, dispatches, checkpoints, and rebalances."""
+    ordering keeps one (``opic_url`` — order_state columns 2:), cash in
+    transit in the staging buffers, and cash parked in the coordination
+    outbox (the ``batched`` mode's carry — repro/coordination/outbox.py).
+    Conserved (up to f32 rounding in the spend split) across steps,
+    dispatches, checkpoints, and rebalances under every coordination mode."""
     os_ = np.asarray(state.order_state, np.float64)
     cash = float(os_[:, 0].sum() + os_[:, ORD_WIDTH:].sum())
     sv = np.asarray(state.staging_val, np.float64)
     sn = np.asarray(state.staging_n)
     staged = sum(sv[i, :int(n)].sum() for i, n in enumerate(sn))
-    return cash + float(staged)
+    ov = np.asarray(state.outbox_val, np.float64)
+    on = np.asarray(state.outbox_n)
+    parked = sum(ov[i, :int(n)].sum() for i, n in enumerate(on))
+    return cash + float(staged) + float(parked)
 
 
 def total_wealth(state) -> float:

@@ -1,0 +1,218 @@
+"""The coordination-mode subsystem (repro.coordination, DESIGN.md §14).
+
+Covers the registry surface, the per-mode dispatch semantics on a single
+shard (quota enforcement, outbox carry, the zero-communication counters,
+batched@quota=inf == exchange bit-for-bit), eager-vs-scan bit-identity for
+every mode, and — in a 4-shard subprocess — the cross-shard behaviors the
+taxonomy is actually about: firewall's coverage loss, crossover's C1
+overlap, batched's bounded bandwidth.
+"""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.api import CrawlSession
+from repro.configs import get_reduced
+from repro.configs.base import scaled
+from repro.coordination import (CoordinationPolicy, coordinations,
+                                get_coordination, register_coordination)
+from repro.core import stages as ST
+from repro.launch.mesh import make_host_mesh
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_reduced("webparf")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh()
+
+
+def assert_states_equal(a, b, msg=""):
+    for name, x, y in zip(ST.CrawlState._fields, a, b):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=f"{msg}: CrawlState.{name} diverged")
+
+
+# ---------------------------------------------------------------------------
+# registry surface
+# ---------------------------------------------------------------------------
+
+def test_builtins_registered_and_default_is_exchange(cfg):
+    assert coordinations() == ("batched", "crossover", "exchange", "firewall")
+    assert cfg.coordination == "exchange"
+    ex = get_coordination("exchange")
+    assert ex.communicates and not ex.uses_outbox and not ex.keeps_foreign
+    fw = get_coordination("firewall")
+    assert not fw.communicates and not fw.uses_outbox
+    assert get_coordination("crossover").keeps_foreign
+    assert get_coordination("batched").uses_outbox
+
+
+def test_register_conflicting_name_errors():
+    ex = get_coordination("exchange")
+    assert register_coordination(ex) is ex          # idempotent re-register
+    clone = CoordinationPolicy("exchange", True, False, False, ex.plan)
+    with pytest.raises(ValueError, match="registered twice"):
+        register_coordination(clone)
+
+
+def test_third_party_mode_is_config_selectable(cfg, mesh):
+    """A registered third-party mode resolves from CrawlConfig.coordination
+    like the built-ins (the registry IS the extension point)."""
+    from repro.coordination import registry as coord_registry
+    fw = get_coordination("firewall")
+    register_coordination(CoordinationPolicy(
+        "firewall_v2", False, False, False, fw.plan))
+    try:
+        rep = CrawlSession(scaled(cfg, coordination="firewall_v2"),
+                           mesh).run(4)
+        assert rep.fetched > 0 and rep.stats["dispatch_sent"] == 0
+    finally:
+        # scrub the process-global registry so exact-tuple assertions stay
+        # order-independent
+        coord_registry._POLICIES.pop("firewall_v2", None)
+
+
+# ---------------------------------------------------------------------------
+# single-shard dispatch semantics
+# ---------------------------------------------------------------------------
+
+def test_zero_communication_modes_ship_nothing(cfg, mesh):
+    for mode in ("firewall", "crossover"):
+        rep = CrawlSession(scaled(cfg, coordination=mode), mesh).run(
+            2 * cfg.dispatch_interval)
+        assert rep.stats["dispatch_sent"] == 0, mode
+        assert rep.stats["dispatch_recv"] > 0, mode   # kept-local URLs
+        assert rep.fetched > 0, mode
+        assert rep.comm["comm_per_page"] == 0.0, mode
+
+
+def test_batched_quota_bounds_shipping_and_parks(cfg, mesh):
+    q = 4
+    sess = CrawlSession(scaled(cfg, coordination="batched", comm_quota=q,
+                               ordering="opic"), mesh)
+    rep = sess.run(2 * cfg.dispatch_interval)
+    rounds = rep.stats["dispatch_rounds"]
+    assert rep.stats["dispatch_sent"] <= q * rounds
+    assert rep.stats["coord_deferred"] > 0
+    assert int(np.asarray(sess.state.outbox_n).sum()) > 0
+    # the ledger reflects the bound
+    assert rep.comm["urls_shipped"] == rep.stats["dispatch_sent"]
+    assert rep.comm["urls_deferred"] == rep.stats["coord_deferred"]
+
+
+def test_batched_unbounded_quota_is_exchange_bit_for_bit(cfg, mesh):
+    """comm_quota=-1 lifts the bound: the batched mode's URL flow must equal
+    the exchange mode's exactly — trajectory, counters, and final state."""
+    steps = 2 * cfg.dispatch_interval
+    a = CrawlSession(scaled(cfg, coordination="exchange",
+                            ordering="opic_url"), mesh)
+    b = CrawlSession(scaled(cfg, coordination="batched", comm_quota=-1,
+                            ordering="opic_url"), mesh)
+    ra, rb = a.run(steps), b.run(steps)
+    np.testing.assert_array_equal(ra.urls, rb.urls)
+    np.testing.assert_array_equal(ra.per_step, rb.per_step)
+    assert ra.stats == rb.stats
+    assert_states_equal(a.state, b.state, "batched@inf vs exchange")
+
+
+def test_exchange_leaves_outbox_untouched(cfg, mesh):
+    sess = CrawlSession(cfg, mesh)
+    sess.run(2 * cfg.dispatch_interval)
+    assert int(np.asarray(sess.state.outbox_n).sum()) == 0
+    assert not np.asarray(sess.state.outbox_val).any()
+
+
+# ---------------------------------------------------------------------------
+# eager vs fused scan — every mode, both value-channel shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ordering", ["backlink", "opic_url"])
+@pytest.mark.parametrize("mode", ["exchange", "firewall", "crossover",
+                                  "batched"])
+def test_eager_scan_bit_identity_per_mode(cfg, mesh, mode, ordering):
+    c = scaled(cfg, coordination=mode, ordering=ordering,
+               comm_quota=6 if mode == "batched" else -1)
+    steps = 2 * c.dispatch_interval
+    a, b = CrawlSession(c, mesh), CrawlSession(c, mesh)
+    rep_e = a.run(steps, mode="eager")
+    rep_s = b.run(steps, mode="scan")
+    np.testing.assert_array_equal(rep_s.urls, rep_e.urls)
+    assert rep_s.stats == rep_e.stats
+    assert_states_equal(b.state, a.state, f"{mode}/{ordering} scan vs eager")
+
+
+# ---------------------------------------------------------------------------
+# 4 shards: the cross-shard trade-offs the taxonomy is about
+# ---------------------------------------------------------------------------
+
+MULTI_SHARD = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    from repro.api import CrawlSession
+    from repro.configs import get_reduced
+    from repro.configs.base import scaled
+
+    base = scaled(get_reduced("webparf"), dispatch_interval=2)
+    steps = 16
+    reps, sess = {}, {}
+    for mode, quota in (("exchange", -1), ("firewall", -1),
+                        ("crossover", -1), ("batched", 8),
+                        ("batched_inf", -1)):
+        cfg = scaled(base, coordination=mode.replace("_inf", ""),
+                     comm_quota=quota)
+        sess[mode] = CrawlSession(cfg)
+        reps[mode] = sess[mode].run(steps)
+
+    ex = reps["exchange"]
+    # firewall: zero bandwidth, foreign URLs actually dropped
+    fw = reps["firewall"]
+    assert fw.stats["dispatch_sent"] == 0, fw.stats
+    assert fw.stats["coord_dropped"] > 0, fw.stats
+    assert fw.comm["comm_per_page"] == 0.0
+    # crossover: zero bandwidth, overlap appears (several shards fetch the
+    # same URL) — exchange's stable ownership keeps C1 lower
+    co = reps["crossover"]
+    assert co.stats["dispatch_sent"] == 0, co.stats
+    assert co.overlap["url_dup"] > ex.overlap["url_dup"], (
+        co.overlap, ex.overlap)
+    # batched: the quota bounds what ships per round; the rest parks
+    bt = reps["batched"]
+    rounds = bt.stats["dispatch_rounds"]
+    n_shards = 4
+    assert bt.stats["dispatch_sent"] <= 8 * rounds, bt.stats
+    assert bt.stats["dispatch_sent"] < ex.stats["dispatch_sent"], (
+        bt.stats, ex.stats)
+    assert bt.stats["coord_deferred"] > 0, bt.stats
+    assert bt.comm["comm_per_page"] < ex.comm["comm_per_page"]
+    # batched at quota=inf == exchange, URL flow and state, bit for bit
+    bi = reps["batched_inf"]
+    np.testing.assert_array_equal(bi.urls, ex.urls)
+    assert bi.stats == ex.stats
+    for name in type(sess["exchange"].state)._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(sess["batched_inf"].state, name)),
+            np.asarray(getattr(sess["exchange"].state, name)),
+            err_msg="batched@inf vs exchange: " + name)
+    print("coordination multi-shard: OK")
+""")
+
+
+@pytest.mark.slow
+def test_coordination_tradeoffs_multi_shard():
+    r = subprocess.run([sys.executable, "-c", MULTI_SHARD],
+                       capture_output=True, text=True, timeout=900, cwd=".")
+    if r.returncode != 0:
+        raise AssertionError(f"STDOUT:\n{r.stdout[-3000:]}\n"
+                             f"STDERR:\n{r.stderr[-3000:]}")
+    assert "coordination multi-shard: OK" in r.stdout

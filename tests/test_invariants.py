@@ -16,12 +16,20 @@ system-wide invariants that used to be spot-checked on default configs only:
 
 Random OP SCHEDULES (step / run-to-dispatch / kill-or-revive / mid-schedule
 checkpoint+restore) are drawn per example and the invariants re-checked
-after EVERY op, for every registered ordering x partitioning combination.
+after EVERY op, for every registered ordering x partitioning combination —
+plus every COORDINATION mode (repro.coordination, DESIGN.md §14) against
+the stateful orderings: firewall's foreign-drop refunds, crossover's
+kept-foreign placement, and the batched mode's outbox-carried value (a
+parked URL's cash lives in ``CrawlState.outbox_val``, counted by
+``total_cash``) must all conserve cash through the same schedules,
+including a checkpoint/restore taken while the outbox is non-empty.
 Runs under real hypothesis when installed, else the deterministic fallback
 shim (tests/_hypothesis_fallback.py).
 
 The kernel implementation is selectable via the ``REPRO_KERNEL_IMPL`` env
-var — the CI test-matrix job replays this suite per implementation.
+var, and the coordination mode of the base ordering x partitioning grid via
+``REPRO_COORDINATION`` — the CI test-matrix job replays this suite per
+kernel implementation and adds an exchange-vs-batched coordination cell.
 
 The multi-shard variant (4 crawl shards, real C4 heal) runs as a slow
 subprocess test below with fixed schedules.
@@ -46,22 +54,35 @@ from repro.ordering import ORD_URL0, get_ordering, orderings, total_cash
 from repro.train.fault import revive
 
 KERNEL_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "auto")
+# coordination mode of the base ordering x partitioning grid (the CI matrix
+# adds a "batched" cell); a small quota forces the outbox to actually carry
+COORDINATION = os.environ.get("REPRO_COORDINATION", "exchange")
 
 COMBOS = [(o, p) for o in orderings() for p in PT.policies()]
+
+# every coordination mode against the stateful orderings: firewall refunds,
+# crossover keeps, batched parks — each must conserve cash per schedule
+from repro.coordination import coordinations  # noqa: E402
+
+COORD_COMBOS = [(c, o) for c in coordinations() for o in ("opic", "opic_url")]
 
 _SESSIONS = {}
 _MESH = None
 
 
-def _session(ordering: str, partitioning: str) -> CrawlSession:
+def _session(ordering: str, partitioning: str,
+             coordination: str = None) -> CrawlSession:
     """One compiled session per combo, reset per example (cheap replays)."""
     global _MESH
     if _MESH is None:
         _MESH = make_host_mesh()
-    key = (ordering, partitioning)
+    coordination = COORDINATION if coordination is None else coordination
+    key = (ordering, partitioning, coordination)
     if key not in _SESSIONS:
         cfg = scaled(get_reduced("webparf"), ordering=ordering,
                      partitioning=partitioning, kernel_impl=KERNEL_IMPL,
+                     coordination=coordination,
+                     comm_quota=6 if coordination == "batched" else -1,
                      link_pop_bias=1.0)
         _SESSIONS[key] = CrawlSession(cfg, _MESH)
     return _SESSIONS[key].reset()
@@ -155,6 +176,50 @@ def test_initial_states_satisfy_invariants():
                          f"[{ordering}/{partitioning}] init")
 
 
+@pytest.mark.parametrize("coordination,ordering", COORD_COMBOS,
+                         ids=[f"{c}-{o}" for c, o in COORD_COMBOS])
+@settings(max_examples=3, deadline=None)
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=6))
+def test_random_schedule_conserves_cash_per_coordination_mode(
+        coordination, ordering, ops):
+    """Firewall refunds, crossover keeps, batched parks in the outbox — all
+    four modes must conserve cash (and keep the ownership maps / url-lane
+    alignment intact) through the same random schedules."""
+    sess = _session(ordering, "webparf", coordination)
+    c0 = total_cash(sess.state)
+    with tempfile.TemporaryDirectory() as tmp:
+        trace = []
+        for op in ops:
+            trace.append(_apply_op(sess, op, tmp))
+            check_invariants(sess, c0, f"[{coordination}/{ordering}] "
+                                       f"after {' -> '.join(trace)}")
+
+
+def test_checkpoint_restore_with_nonempty_outbox():
+    """Mid-interval checkpoint/restore while the batched mode's outbox is
+    CARRYING value: the parked URLs (and their cash) must round-trip
+    bit-for-bit and keep conserving afterwards."""
+    sess = _session("opic_url", "webparf", "batched")
+    iv = sess.cfg.dispatch_interval
+    c0 = total_cash(sess.state)
+    sess.run(iv)                       # one dispatch: quota=6 forces parking
+    assert int(np.asarray(sess.state.outbox_n).sum()) > 0, \
+        "schedule failed to fill the outbox (quota too large?)"
+    sess.run(1)                        # step OFF the interval boundary
+    with tempfile.TemporaryDirectory() as tmp:
+        sess.checkpoint(tmp)
+        snap = [np.asarray(leaf).copy() for leaf in sess.state]
+        sess.run(iv)                   # advance through another dispatch
+        sess.restore(tmp)
+        for name, a, b in zip(type(sess.state)._fields, snap, sess.state):
+            np.testing.assert_array_equal(
+                a, np.asarray(b),
+                err_msg=f"outbox ckpt: CrawlState.{name} did not round-trip")
+    check_invariants(sess, c0, "outbox restore")
+    sess.run(2 * iv)                   # parked URLs retry after the restore
+    check_invariants(sess, c0, "outbox post-restore")
+
+
 # ---------------------------------------------------------------------------
 # multi-shard (4 crawl processes): real C4 fail -> heal -> rebalance cycles
 # ---------------------------------------------------------------------------
@@ -214,6 +279,50 @@ MULTI_SHARD_INVARIANTS = textwrap.dedent("""
                 assert stray == 0.0, (tag, "cash on unmapped slots", stray)
             sess.run(2 * iv)
             check_invariants(sess, c0, tag + " post-heal")
+
+    # coordination modes under REAL cross-shard traffic (4 C-procs): firewall
+    # actually drops foreign URLs (refunds), crossover actually keeps them
+    # (hashed spare rows), batched actually parks/retries through the outbox
+    # — each through a fail -> ckpt/restore -> heal cycle. quota=8 keeps the
+    # outbox non-empty across the restore.
+    for coordination, ordering in (("firewall", "opic"),
+                                   ("firewall", "opic_url"),
+                                   ("crossover", "opic"),
+                                   ("crossover", "opic_url"),
+                                   ("batched", "opic"),
+                                   ("batched", "opic_url")):
+        cfg = scaled(get_reduced("webparf"), ordering=ordering,
+                     coordination=coordination, comm_quota=8,
+                     link_pop_bias=1.0,
+                     kernel_impl=os.environ["REPRO_KERNEL_IMPL"])
+        sess = CrawlSession(cfg)
+        iv = cfg.dispatch_interval
+        c0 = total_cash(sess.state)
+        tag = coordination + "/" + ordering
+        sess.run(2 * iv + 1)
+        check_invariants(sess, c0, tag + " pre-fail")
+        s = sess.stats
+        if coordination == "batched":
+            assert int(np.asarray(sess.state.outbox_n).sum()) > 0, \
+                (tag, "outbox empty despite quota")
+            assert s["coord_deferred"] > 0, (tag, "nothing deferred")
+        else:
+            assert s["dispatch_sent"] == 0, (tag, "zero-comm mode shipped")
+        if coordination == "firewall":
+            assert s["coord_dropped"] > 0, (tag, "no foreign URL dropped")
+        sess.inject_failure(1)
+        sess.run(iv)
+        check_invariants(sess, c0, tag + " dead")
+        import tempfile
+        with tempfile.TemporaryDirectory() as tmp:
+            sess.checkpoint(tmp)
+            sess.run(2)
+            sess.restore(tmp)
+        check_invariants(sess, c0, tag + " restored-dead")
+        sess.heal()
+        check_invariants(sess, c0, tag + " healed")
+        sess.run(2 * iv)
+        check_invariants(sess, c0, tag + " post-heal")
 
     # rebalance's MERGE fallback: kill 3 of 4 shards, leaving more homeless
     # domains than free slots on the survivor — merged domains share a slot

@@ -110,6 +110,40 @@ def test_frontier_select_pop_semantics():
     assert list(np.asarray(p2)[0]) == [2.0, 1.0]
 
 
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("R,C,k", [(4, 64, 4), (2, 128, 8)])
+def test_frontier_select_return_idx(R, C, k, impl):
+    """Extended contract: the popped cell indices name exactly the cells the
+    pop invalidated, in selection order (unique priorities make the popped
+    set deterministic across implementations)."""
+    url = jnp.asarray(RNG.integers(0, 1 << 24, (R, C)), jnp.uint32)
+    pri = jnp.asarray(RNG.permutation(R * C).reshape(R, C), jnp.float32)
+    valid = jnp.asarray(RNG.random((R, C)) < 0.5)
+    base = select(url, pri, valid, k=k, impl=impl)
+    got, p, mask, pri2, valid2, idx = select(url, pri, valid, k=k, impl=impl,
+                                             return_idx=True)
+    # the 5-output prefix is unchanged by asking for indices
+    for a, b in zip(base, (got, p, mask, pri2, valid2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    idx, mask = np.asarray(idx), np.asarray(mask)
+    rows = np.arange(R)[:, None]
+    # each masked lane's index points at the cell that was invalidated and
+    # whose url/priority the pop returned
+    assert ((idx >= 0) & (idx < C)).all()
+    np.testing.assert_array_equal(
+        np.asarray(valid)[rows, idx] & mask, mask)
+    assert not (np.asarray(valid2)[rows, idx] & mask).any()
+    np.testing.assert_array_equal(
+        np.where(mask, np.asarray(url)[rows, idx], 0),
+        np.where(mask, np.asarray(got), 0))
+    # ref and interpret agree on the popped cells (unique priorities)
+    other = select(url, pri, valid, k=k,
+                   impl="interpret" if impl == "ref" else "ref",
+                   return_idx=True)[5]
+    np.testing.assert_array_equal(np.where(mask, idx, -1),
+                                  np.where(mask, np.asarray(other), -1))
+
+
 # ---------------------------------------------------------------------------
 # packed bloom variant (8x VMEM density)
 # ---------------------------------------------------------------------------

@@ -104,7 +104,7 @@ def test_migrate_rows_moves_dead_rows_to_new_owner(cfg):
 
 
 # ---------------------------------------------------------------------------
-# unknown-name error paths of the three registries
+# unknown-name error paths of the four registries
 # ---------------------------------------------------------------------------
 
 def test_partition_policy_unknown_errors():
@@ -124,3 +124,9 @@ def test_ordering_registry_unknown_errors():
     from repro.ordering import get_ordering
     with pytest.raises(KeyError, match="unknown ordering"):
         get_ordering("bfs")
+
+
+def test_coordination_registry_unknown_errors():
+    from repro.coordination import get_coordination
+    with pytest.raises(KeyError, match="unknown coordination"):
+        get_coordination("gossip")
