@@ -1,18 +1,121 @@
-"""C5 — batched vs immediate URL exchange: rounds, bytes moved, drops.
+"""C5 — batched vs immediate URL exchange: rounds, bytes moved, drops —
+plus the fused-dispatch perf trajectory (DESIGN.md §15).
 
 The paper's claim: exchanging URLs in batches cuts the per-URL exchange
 overhead. Here the measurable costs are collective rounds (launch overhead)
 and total exchanged URLs; the trade-off is staging-buffer drops + frontier
 latency.
+
+The second section times the dispatch STEP with the fused kernel path
+(``CrawlConfig.fused_dispatch``) against the unfused composition at 1x /
+8x / 64x frontier capacity, and proves via the compiled HLO's shape census
+that the unfused ``(r_slots, M, C)`` twin-match intermediate is gone from
+the fused program. ``main`` returns the measurements as a dict —
+``benchmarks.run`` persists it as ``BENCH_dispatch.json``, the committed
+perf trajectory.
 """
 from __future__ import annotations
+
+import re
+import time
 
 import numpy as np
 
 from benchmarks.crawl_common import overlap_metrics, run_crawl, stats_dict
 
 
-def main(steps: int = 48):
+def _dispatch_step_time(cfg, iters: int = 8):
+    """Wall time of the jitted dispatch step on a fixed warmed-up state
+    (staging populated by dispatch_interval-1 fetch steps)."""
+    import jax
+
+    from repro.api import CrawlSession
+    sess = CrawlSession(cfg)
+    for _ in range(cfg.dispatch_interval - 1):
+        sess.step()
+    state = sess.state
+    for _ in range(2):
+        jax.block_until_ready(sess._step_d(state))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = sess._step_d(state)
+    jax.block_until_ready(out)
+    dt = (time.perf_counter() - t0) / iters
+    hlo = sess._step_d.lower(state).compile().as_text()
+    return dt, hlo
+
+
+def fused_trajectory(scales=(1, 8, 64), iters: int = 8) -> dict:
+    """Fused vs unfused dispatch-step wall time per frontier-capacity scale,
+    with the HLO evidence: twin-intermediate bytes (must be 0 fused) and
+    peak single-tensor bytes."""
+    from benchmarks.hlo_analysis import peak_tensor_bytes, shape_census
+    from repro.configs import get_arch
+    from repro.configs.base import scaled
+
+    base = scaled(get_arch("webparf")[0], n_domains=8, slot_factor=2,
+                  frontier_capacity=128, fetch_batch=16, bloom_bits_log2=16,
+                  dispatch_capacity=512, url_space_log2=24,
+                  ordering="opic_url", link_pop_bias=1.0, dispatch_interval=4)
+    r_slots = base.n_slots                       # single-shard benchmark
+    print("\n== fused dispatch hot path: step time vs frontier capacity ==")
+    print(f"{'scale':>6s} {'capacity':>9s} {'fused_ms':>9s} {'unfused_ms':>11s}"
+          f" {'speedup':>8s} {'twin_MiB':>9s} {'peak_MiB(f/u)':>14s}")
+    out = {"config": {"n_domains": base.n_domains, "r_slots": r_slots,
+                      "base_capacity": base.frontier_capacity,
+                      "dispatch_capacity": base.dispatch_capacity,
+                      "iters": iters},
+           "scales": {}}
+    url_tile = 256  # dedup_deposit default — the fused VMEM tile width
+    for scale in scales:
+        cfg = scaled(base, frontier_capacity=base.frontier_capacity * scale)
+        C = cfg.frontier_capacity
+        # the per-row pool width the stage buckets into (stages.py):
+        # min(n_shards * cap_ex, C) with n_shards=1 on this host
+        M = min(max(8, 2 * cfg.dispatch_capacity), C)
+        t_f, hlo_f = _dispatch_step_time(scaled(cfg, fused_dispatch=True),
+                                         iters)
+        t_u, hlo_u = _dispatch_step_time(scaled(cfg, fused_dispatch=False),
+                                         iters)
+
+        def twin_bytes(hlo):
+            # the unfused twin match materializes pred[r_slots, M, C]
+            pat = re.compile(rf"^pred\[{r_slots},{M},{C}\]$")
+            return sum(e["bytes"] for k, e in shape_census(hlo).items()
+                       if pat.match(k))
+        tw_f, tw_u = twin_bytes(hlo_f), twin_bytes(hlo_u)
+        pk_f, pk_u = peak_tensor_bytes(hlo_f), peak_tensor_bytes(hlo_u)
+        if M > url_tile:
+            # below the tile width the fused ref walk is a single tile of
+            # the SAME shape, so the census can't tell them apart — the
+            # claim is about pools wider than one tile (8x+ here)
+            assert tw_f == 0, "fused HLO still materializes the full-pool " \
+                f"twin intermediate ({tw_f} B)"
+        assert tw_u > 0, "unfused baseline lost its twin intermediate " \
+            "(benchmark shape census is miscalibrated)"
+        print(f"{scale:5d}x {C:9d} {t_f*1e3:9.2f} {t_u*1e3:11.2f} "
+              f"{t_u/t_f:7.2f}x {tw_u/2**20:9.1f} "
+              f"{pk_f/2**20:6.1f}/{pk_u/2**20:.1f}")
+        out["scales"][f"{scale}x"] = {
+            "frontier_capacity": C,
+            "fused_ms": round(t_f * 1e3, 3),
+            "unfused_ms": round(t_u * 1e3, 3),
+            "speedup": round(t_u / t_f, 3),
+            "twin_intermediate_bytes": {"fused": tw_f, "unfused": tw_u},
+            "peak_tensor_bytes": {"fused": pk_f, "unfused": pk_u},
+        }
+    big = [s for s in out["scales"].values()
+           if s["frontier_capacity"] >= 8 * base.frontier_capacity]
+    ok = all(s["speedup"] > 1.0 for s in big)
+    spd = ", ".join(f"{s['speedup']:.2f}x" for s in big)
+    print(f"verdict: fused dispatch {'IMPROVES' if ok else 'DOES NOT improve'}"
+          f" step wall time at 8x+ frontier capacity ({spd}); "
+          f"twin (r_slots, M, C) intermediate absent from the fused HLO")
+    out["verdict_8x_plus_improves"] = ok
+    return out
+
+
+def main(steps: int = 48) -> dict:
     from repro.configs import get_arch
     from repro.configs.base import scaled
 
@@ -32,6 +135,7 @@ def main(steps: int = 48):
               f"{s['staging_drop']:12d} {len(urls):8d}")
     print("(same discovered volume exchanged in fewer, larger rounds; "
           "launch overhead amortizes linearly with the interval)")
+    return fused_trajectory()
 
 
 if __name__ == "__main__":

@@ -167,6 +167,39 @@ def _loop_trip_count(cond: Computation) -> int:
     return best
 
 
+def shape_census(hlo: str) -> Dict[str, dict]:
+    """Census of every instruction RESULT shape in the module (all
+    computations, fusion bodies included): ``"dtype[d0,d1,...]" ->
+    {"count", "bytes"}`` where bytes sums over occurrences. The perf
+    benchmarks use this to prove a fused kernel really removed an
+    intermediate — e.g. dispatch's ``(r_slots, M, C)`` twin-match tensor
+    must census to zero under ``CrawlConfig.fused_dispatch``."""
+    out: Dict[str, dict] = {}
+    for comp in _parse_computations(hlo).values():
+        for ins in comp.instrs:
+            if ins.op in ("parameter", "tuple", "get-tuple-element"):
+                continue
+            for dtype, dims in ins.shapes:
+                key = f"{dtype}[{dims}]"
+                ent = out.setdefault(key, {"count": 0, "bytes": 0})
+                ent["count"] += 1
+                ent["bytes"] += _shape_bytes([(dtype, dims)])
+    return out
+
+
+def peak_tensor_bytes(hlo: str) -> int:
+    """Largest single instruction-result tensor in the module — a proxy for
+    the largest intermediate the compiled program materializes."""
+    peak = 0
+    for comp in _parse_computations(hlo).values():
+        for ins in comp.instrs:
+            if ins.op in ("parameter", "tuple", "get-tuple-element"):
+                continue
+            for shape in ins.shapes:
+                peak = max(peak, _shape_bytes([shape]))
+    return peak
+
+
 def analyze_hlo(hlo: str) -> dict:
     comps = _parse_computations(hlo)
     entry = comps.get("__entry__")

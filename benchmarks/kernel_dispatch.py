@@ -114,6 +114,83 @@ def bench_opic_update(B=1, R=512, N=16384, tile=256):
         print(f"  {impl:>10s}: {dt*1e3:8.2f} ms{tag}")
 
 
+def bench_dedup_deposit(R=64, M=1024, C=1024, bits_log2=16, k=4):
+    import jax.numpy as jnp
+    from repro.kernels import registry
+    from repro.kernels.dedup_deposit.ops import dedup_deposit
+
+    rng = np.random.default_rng(3)
+    bits = jnp.zeros((R, 1 << bits_log2), jnp.uint8)
+    f_url = jnp.asarray(rng.integers(1, 1 << 24, (R, C)), jnp.uint32)
+    f_valid = jnp.asarray(rng.random((R, C)) < 0.6)
+    table = jnp.asarray(rng.random((R, C)), jnp.float32) * f_valid
+    # half the arrivals alias queued URLs (twin deposits after the filter
+    # learns them), the rest are fresh
+    urls = jnp.where(jnp.asarray(rng.random((R, M)) < 0.5),
+                     jnp.tile(f_url, (1, -(-M // C)))[:, :M],
+                     jnp.asarray(rng.integers(1 << 24, 1 << 25, (R, M)),
+                                 jnp.uint32))
+    mask = jnp.asarray(rng.random((R, M)) < 0.8)
+    val = jnp.asarray(rng.random((R, M)), jnp.float32)
+    _, bits, _, _ = dedup_deposit(bits, urls, mask, val, f_url, f_valid,
+                                  table, k=k, impl="ref")
+
+    impls = [i for i in registry.available("dedup_deposit")
+             if i in _impls() or (i.endswith("_packed")
+                                  and i[:-len("_packed")] in _impls())]
+    print(f"\n-- dedup_deposit fused probe+twin+deposit "
+          f"(R={R}, M={M}, C={C}, 2^{bits_log2} bits, k={k}) --")
+    ref = None
+    for impl in impls:
+        dt = _bench(lambda i=impl: dedup_deposit(
+            bits, urls, mask, val, f_url, f_valid, table, k=k, impl=i))
+        out = dedup_deposit(bits, urls, mask, val, f_url, f_valid, table,
+                            k=k, impl=impl)
+        tag = ""
+        if ref is None:
+            ref = out
+        else:
+            same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                       for a, b in zip(ref, out))
+            tag = "  (== ref)" if same else "  (MISMATCH vs ref)"
+        print(f"  {impl:>16s}: {dt*1e3:8.2f} ms{tag}")
+
+
+def bench_select_harvest(R=128, C=2048, k=16):
+    import jax.numpy as jnp
+    from repro.core.frontier import NEG
+    from repro.kernels.frontier_select.ops import select_harvest
+
+    rng = np.random.default_rng(4)
+    url = jnp.asarray(rng.integers(0, 1 << 30, (R, C)), jnp.uint32)
+    valid = jnp.asarray(rng.random((R, C)) < 0.5)
+    # crawl-state invariants: invalid slots hold NEG priority and 0 cash
+    pri = jnp.where(valid,
+                    jnp.asarray(rng.permutation(R * C).reshape(R, C),
+                                jnp.float32), NEG)
+    table = jnp.asarray(rng.random((R, C)), jnp.float32) * valid
+
+    print(f"\n-- select_harvest fused pop+cash-gather (R={R}, C={C}, k={k}) --")
+    ref = None
+    for impl in _impls():
+        dt = _bench(lambda i=impl: select_harvest(url, pri, valid, table,
+                                                  k=k, impl=i))
+        out = select_harvest(url, pri, valid, table, k=k, impl=impl)
+        tag = ""
+        if ref is None:
+            ref = out
+        else:
+            # compare post-state planes + cash (masked selection lanes are
+            # unspecified by the family contract)
+            sm = np.asarray(ref[2])
+            same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                       for a, b in zip((ref[3], ref[4], ref[6], ref[7]),
+                                       (out[3], out[4], out[6], out[7]))) \
+                and np.array_equal(sm, np.asarray(out[2]))
+            tag = "  (== ref)" if same else "  (MISMATCH vs ref)"
+        print(f"  {impl:>16s}: {dt*1e3:8.2f} ms{tag}")
+
+
 def bench_crawl_step(steps=16):
     from repro.configs import get_arch
     from repro.configs.base import scaled
@@ -139,6 +216,7 @@ def main(smoke: bool = False):
     from repro.kernels import registry
     # importing ops modules registers every implementation
     import repro.kernels.bloom.ops  # noqa: F401
+    import repro.kernels.dedup_deposit.ops  # noqa: F401
     import repro.kernels.flash_attention.ops  # noqa: F401
     import repro.kernels.frontier_select.ops  # noqa: F401
     import repro.kernels.opic_update.ops  # noqa: F401
@@ -151,11 +229,15 @@ def main(smoke: bool = False):
         bench_frontier_select(R=16, C=256, k=8)
         bench_bloom(R=16, M=128, bits_log2=12)
         bench_opic_update(B=1, R=64, N=1024)
+        bench_dedup_deposit(R=8, M=128, C=128, bits_log2=12)
+        bench_select_harvest(R=16, C=256, k=8)
         bench_crawl_step(steps=4)
     else:
         bench_frontier_select()
         bench_bloom()
         bench_opic_update()
+        bench_dedup_deposit()
+        bench_select_harvest()
         bench_crawl_step()
 
 

@@ -4,15 +4,23 @@ report from the dry-run artifacts.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run overlap    # one suite
+
+A suite whose ``main`` returns a dict gets that dict persisted as
+``BENCH_<suite>.json`` next to this file's repo root — the mechanism behind
+the committed perf trajectories (currently ``BENCH_dispatch.json``).
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
 import traceback
 
 SUITES = ("overlap", "dispatch", "kernel_dispatch", "ordering",
           "session_scan", "scaling", "fault", "roofline")
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 def main(argv=None) -> None:
@@ -23,7 +31,12 @@ def main(argv=None) -> None:
         print(f"\n{'='*74}\nbenchmark suite: {name}\n{'='*74}")
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
-            mod.main()
+            result = mod.main()
+            if isinstance(result, dict):
+                out = ROOT / f"BENCH_{name}.json"
+                out.write_text(json.dumps(result, indent=2, sort_keys=True)
+                               + "\n")
+                print(f"-- wrote {out}")
             print(f"-- {name} done in {time.time()-t0:.1f}s")
         except Exception:
             traceback.print_exc()

@@ -243,6 +243,17 @@ class CrawlConfig:
                                       # "ref" | "pallas" | "interpret" | "auto"
                                       # (auto = Pallas on TPU, ref elsewhere;
                                       # resolved by kernels/registry.py)
+    fused_dispatch: bool = True       # fuse the dispatch hot path (DESIGN.md
+                                      # §15): Bloom probe + queued-twin match
+                                      # + cash deposit in one dedup_deposit
+                                      # kernel pass, pop + cell harvest in one
+                                      # select launch, and a single whole-
+                                      # queue rescore instead of a per-insert
+                                      # score pass. False keeps the unfused
+                                      # composition — the semantics oracle
+                                      # and the benchmark baseline
+                                      # (bit-identical trajectories either
+                                      # way; tests/test_fused_dispatch.py)
 
     @property
     def n_slots(self) -> int:

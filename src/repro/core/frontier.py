@@ -141,6 +141,24 @@ def select(f: Frontier, k: int, *, impl: str = "ref",
     return got, pri, mask, fr
 
 
+def select_harvest(f: Frontier, table: jax.Array, k: int, *,
+                   impl: str = "ref"):
+    """Fused pop + url-lane cash harvest (DESIGN.md §15): one kernel launch
+    pops the top-k of every row, gathers each popped cell's value from
+    ``table`` (R, C), and zeroes the popped cells in the same pass.
+
+    Returns (urls (R,k), priorities (R,k), mask (R,k), new frontier,
+    idx (R,k) int32, cash (R,k) f32, table'). Because the url lane keeps
+    invalid cells at exactly 0.0 (the lane invariant, tests/test_invariants),
+    the targeted popped-cell zeroing is bit-identical to the unfused path's
+    full ``where(valid, table, 0)`` mask."""
+    from repro.kernels.frontier_select.ops import select_harvest as _kern
+    got, pri, mask, new_pri, new_valid, idx, cash, table2 = _kern(
+        f.url, f.priority, f.valid, table, k=k, impl=impl)
+    return (got, pri, mask, f._replace(valid=new_valid, priority=new_pri),
+            idx, cash, table2)
+
+
 def _plan_insert(f: Frontier, urls: jax.Array, scores: jax.Array,
                  mask: jax.Array, *, n_buckets: int):
     """Shared insert core: FIFO rebase, priority encoding, and free-slot
@@ -234,6 +252,22 @@ def insert_valued(f: Frontier, table: jax.Array, urls: jax.Array,
                                 impl=impl)
     refund = jnp.where(mask & ~fits, values, 0.0).sum(axis=1)
     return out, table2, refund
+
+
+def place_valued(f: Frontier, table: jax.Array, urls: jax.Array,
+                 mask: jax.Array, values: jax.Array, *, impl: str = "ref"
+                 ) -> Tuple[Frontier, jax.Array, jax.Array]:
+    """Valued insert with PLACEHOLDER priorities — the rescore fold
+    (DESIGN.md §15). Items land in bucket 0 (pri = -arrival, which
+    ``_decode_arrival`` inverts exactly: both terms are f32 integers
+    < 2^20), so slot targeting, drops, and refunds are identical to
+    ``insert_valued`` while the per-item score pass is skipped entirely.
+    The caller MUST ``rescore`` the queue before its priorities are next
+    observed — dispatch's whole-queue re-prioritization is that rescore,
+    making it the single scoring pass of the fused dispatch path."""
+    zero = jnp.zeros(urls.shape, jnp.float32)
+    return insert_valued(f, table, urls, zero, mask, values, n_buckets=1,
+                         impl=impl)
 
 
 def rescore(f: Frontier, scores: jax.Array, *, n_buckets: int) -> Frontier:

@@ -289,24 +289,29 @@ def allocate(ctx: StageContext, state: CrawlState,
     alive = state.shard_alive[shard]
     fr = frontier_view(state)
 
-    if ctx.url_lane:
-        # per-URL cash lane: the select itself reports which cells it popped
-        # (the extended frontier_select contract — ref/interpret surface the
-        # indices natively; ops.select recomputes them for the compiled
-        # pallas path)
+    url_cash, table, order_state = None, None, state.order_state
+    if ctx.url_lane and cfg.fused_dispatch:
+        # fused pop + harvest (DESIGN.md §15): one select_harvest launch
+        # pops the top-k, gathers each popped cell's cash, and zeroes the
+        # cell in the same VMEM residency — no separate full-table gather
+        # and rewrite. Targeted zeroing matches the unfused full invalid-
+        # cell mask because invalid cells already hold exactly 0.
+        urls, pri, pre_sel, fr, idx, url_cash, table = F.select_harvest(
+            fr, order_state[:, ORD_URL0:], ctx.k_row, impl=ctx.impl)
+    elif ctx.url_lane:
+        # per-URL cash lane, unfused: the select reports which cells it
+        # popped (the extended frontier_select contract) and the harvest is
+        # a separate gather + whole-table rewrite
         urls, pri, pre_sel, fr, idx = F.select(fr, ctx.k_row, impl=ctx.impl,
                                                return_idx=True)
-    else:
-        urls, pri, pre_sel, fr = F.select(fr, ctx.k_row, impl=ctx.impl)
-    r_local = urls.shape[0]
-
-    url_cash, table, order_state = None, None, state.order_state
-    if ctx.url_lane:
         table = order_state[:, ORD_URL0:]
         url_cash = jnp.where(pre_sel,
                              jnp.take_along_axis(table, idx, axis=1), 0.0)
         # popped cells zero out (invalid cells already hold exactly 0)
         table = jnp.where(fr.valid, table, 0.0)
+    else:
+        urls, pri, pre_sel, fr = F.select(fr, ctx.k_row, impl=ctx.impl)
+    r_local = urls.shape[0]
 
     def give_back(fr, table, order_state, url_cash, mask):
         """Return popped URLs (and, on the url lane, their cash) to the
@@ -415,6 +420,21 @@ def extract_stage(ctx: StageContext, state: CrawlState, carry: StepCarry
     delta = {"discovered": discovered, "dedup_exact": dedup_exact,
              "staging_drop": (flat_m & ~fits).sum()}
     return state, carry, delta
+
+
+def _entry_scores(ctx: StageContext, state: CrawlState, rb: jax.Array,
+                  rbf: Optional[jax.Array], val: Optional[jax.Array] = None
+                  ) -> jax.Array:
+    """Entry scores for received URLs about to enter the frontier, shared
+    by the url-lane and plain insert paths. ``rbf`` marks crossover's
+    kept-foreign URLs: those enter at the lowest priority bucket — fetched
+    only once the local frontier runs dry (the mode's entry discipline;
+    a url-lane rescore may later re-rank them with the rest of the queue)."""
+    scores = (ctx.score_fn(rb, ctx.cfg, state, val=val) if val is not None
+              else ctx.score_fn(rb, ctx.cfg, state))
+    if rbf is not None:
+        scores = jnp.where(rbf, 0.0, scores)
+    return scores
 
 
 def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
@@ -561,60 +581,77 @@ def dispatch_exchange(ctx: StageContext, state: CrawlState, carry: StepCarry
         rbf = rbp[..., 1] > 0 if coord.keeps_foreign else None
     delta["frontier_drop"] = rdrop
 
-    bloom = DD.Bloom(state.bloom_bits, cfg.bloom_bits_log2)
-    seen, bloom = DD.probe_insert(bloom, rb, rbmask, k=cfg.bloom_hashes,
-                                  impl=ctx.impl)
-    fresh = rbmask & ~seen
-    delta["dedup_bloom"] = (rbmask & seen).sum()
-
     fr = frontier_view(state)
-    if ctx.url_lane:
-        from repro.kernels.opic_update.ops import scatter_cash_cells
-        C = fr.url.shape[1]
-        # a Bloom-dup'd arrival is usually a URL still QUEUED in this row:
-        # find its cell and accumulate the cash there (classic OPIC — a
-        # page's cash grows with its in-link rate); only arrivals with no
-        # queued twin (already fetched, or a Bloom false positive) refund
-        # to the receiving row's slot cash
-        dupm = rbmask & ~fresh
-        twin = (rb[:, :, None] == fr.url[:, None, :]) \
-            & fr.valid[:, None, :] & dupm[:, :, None]  # (r_slots, M, C)
-        hit = twin.any(-1)
-        cell = jnp.argmax(twin, axis=-1).astype(jnp.int32)
-        rowix = jnp.broadcast_to(
-            jnp.arange(r_slots, dtype=jnp.int32)[:, None], rb.shape)
-        table = scatter_cash_cells(
-            order_state[:, ORD_URL0:], rowix, jnp.where(hit, cell, C), rv, hit,
-            impl=ctx.impl)
-        dup_refund = jnp.where(dupm & ~hit, rv, 0.0).sum(axis=1)
-        # fresh survivors' cash is deposited at the cell the insert assigns
-        # (scatter_cash_cells inside insert_valued); frontier-overflow drops
-        # are refunded by insert_valued itself
-        scores = ctx.score_fn(rb, cfg, state, val=rv)
-        if rbf is not None:
-            # crossover: kept-foreign URLs enter at the lowest priority
-            # bucket — fetched only once the local frontier runs dry (the
-            # per-dispatch rescore below may later re-rank them with the
-            # rest of the queue; the entry discipline is what the mode
-            # specifies)
-            scores = jnp.where(rbf, 0.0, scores)
-        fr, table, ins_refund = F.insert_valued(
-            fr, table, rb, scores, fresh, jnp.where(fresh, rv, 0.0),
-            n_buckets=cfg.n_priority_buckets, impl=ctx.impl)
+    if ctx.url_lane and cfg.fused_dispatch:
+        # fused dedup+deposit (DESIGN.md §15): one kernel pass probes the
+        # Bloom row, matches dup'd arrivals against the URLs still QUEUED
+        # in the row (tile-by-tile in VMEM — the (r_slots, M, C) twin
+        # tensor of the unfused path never materializes), accumulates each
+        # twin's cash into its cell, and sums the no-twin refunds
+        from repro.kernels.dedup_deposit.ops import dedup_deposit
+        seen, bbits, table, dup_refund = dedup_deposit(
+            state.bloom_bits, rb, rbmask, rv, fr.url, fr.valid,
+            order_state[:, ORD_URL0:], k=cfg.bloom_hashes, impl=ctx.impl)
+        bloom = DD.Bloom(bbits, cfg.bloom_bits_log2)
+        fresh = rbmask & ~seen
+        delta["dedup_bloom"] = (rbmask & seen).sum()
+        # placeholder-priority insert: the whole-queue rescore below is the
+        # ONLY scoring pass (the rescore fold — unfused insert-time
+        # priorities are never observed before that rescore overwrites
+        # them, so skipping the per-item score pass is bit-identical; the
+        # crossover lowest-bucket clamp is subsumed the same way)
+        fr, table, ins_refund = F.place_valued(
+            fr, table, rb, fresh, jnp.where(fresh, rv, 0.0), impl=ctx.impl)
         order_state = _with_lane(order_state, table, dup_refund + ins_refund)
-        # re-prioritize the whole queue from the CURRENT cell cash: in-link
-        # cash accumulated since insert re-ranks queued URLs once per
-        # exchange (the bounded-cost point to refresh every queue at once)
         fr = F.rescore(fr, ctx.score_fn(fr.url, cfg, state,
                                         val=order_state[:, ORD_URL0:]),
                        n_buckets=cfg.n_priority_buckets)
     else:
-        scores = ctx.score_fn(rb, cfg, state)
-        if rbf is not None:
-            # crossover: kept-foreign URLs enter at the lowest priority
-            # bucket — fetched only once the local frontier runs dry
-            scores = jnp.where(rbf, 0.0, scores)
-        fr = F.insert(fr, rb, scores, fresh, n_buckets=cfg.n_priority_buckets)
+        bloom = DD.Bloom(state.bloom_bits, cfg.bloom_bits_log2)
+        seen, bloom = DD.probe_insert(bloom, rb, rbmask, k=cfg.bloom_hashes,
+                                      impl=ctx.impl)
+        fresh = rbmask & ~seen
+        delta["dedup_bloom"] = (rbmask & seen).sum()
+
+        if ctx.url_lane:
+            from repro.kernels.opic_update.ops import scatter_cash_cells
+            C = fr.url.shape[1]
+            # a Bloom-dup'd arrival is usually a URL still QUEUED in this
+            # row: find its cell and accumulate the cash there (classic
+            # OPIC — a page's cash grows with its in-link rate); only
+            # arrivals with no queued twin (already fetched, or a Bloom
+            # false positive) refund to the receiving row's slot cash
+            dupm = rbmask & ~fresh
+            twin = (rb[:, :, None] == fr.url[:, None, :]) \
+                & fr.valid[:, None, :] & dupm[:, :, None]  # (r_slots, M, C)
+            hit = twin.any(-1)
+            cell = jnp.argmax(twin, axis=-1).astype(jnp.int32)
+            rowix = jnp.broadcast_to(
+                jnp.arange(r_slots, dtype=jnp.int32)[:, None], rb.shape)
+            table = scatter_cash_cells(
+                order_state[:, ORD_URL0:], rowix, jnp.where(hit, cell, C),
+                rv, hit, impl=ctx.impl)
+            dup_refund = jnp.where(dupm & ~hit, rv, 0.0).sum(axis=1)
+            # fresh survivors' cash is deposited at the cell the insert
+            # assigns (scatter_cash_cells inside insert_valued); frontier-
+            # overflow drops are refunded by insert_valued itself
+            scores = _entry_scores(ctx, state, rb, rbf, val=rv)
+            fr, table, ins_refund = F.insert_valued(
+                fr, table, rb, scores, fresh, jnp.where(fresh, rv, 0.0),
+                n_buckets=cfg.n_priority_buckets, impl=ctx.impl)
+            order_state = _with_lane(order_state, table,
+                                     dup_refund + ins_refund)
+            # re-prioritize the whole queue from the CURRENT cell cash:
+            # in-link cash accumulated since insert re-ranks queued URLs
+            # once per exchange (the bounded-cost point to refresh every
+            # queue at once)
+            fr = F.rescore(fr, ctx.score_fn(fr.url, cfg, state,
+                                            val=order_state[:, ORD_URL0:]),
+                           n_buckets=cfg.n_priority_buckets)
+        else:
+            scores = _entry_scores(ctx, state, rb, rbf)
+            fr = F.insert(fr, rb, scores, fresh,
+                          n_buckets=cfg.n_priority_buckets)
 
     state = with_frontier(state, fr)._replace(
         bloom_bits=bloom.bits, order_state=order_state,

@@ -6,6 +6,13 @@ lives in VMEM; selection is k rounds of masked max+argmax — for the small k
 of a fetch batch this beats a full sort (XLA's top_k lowers to sort) and
 fuses the invalidation writeback into the same VMEM residency.
 
+The widened SELECT+HARVEST entry point (``select_harvest_kernel``,
+DESIGN.md §15) additionally carries the url-lane cash table through the
+same launch: each popped cell's cash is read into a (R, k) harvest and the
+cell zeroed while the row is still VMEM-resident, so url-lane orderings
+(opic_url) pop URLs AND collect their per-URL value in one kernel instead
+of a pop followed by a full-table gather+rewrite.
+
 Grid is (R,); one row per step.
 """
 from __future__ import annotations
@@ -46,13 +53,41 @@ def _kernel(url_ref, pri_ref, valid_ref, sel_url_ref, sel_pri_ref,
     valid_out_ref[0] = valid_new
 
 
+def _harvest_kernel(url_ref, pri_ref, valid_ref, table_ref, sel_url_ref,
+                    sel_pri_ref, sel_mask_ref, pri_out_ref, valid_out_ref,
+                    idx_out_ref, cash_ref, table_out_ref, *, k: int):
+    pri = jnp.where(valid_ref[0], pri_ref[0], NEG)       # (C,) f32
+    urls = url_ref[0]
+    tab = table_ref[0]                                   # (C,) cash lane
+    C = pri.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (C,), 0)
+    valid_new = valid_ref[0]
+    for j in range(k):
+        m = pri.max()
+        idx = jnp.min(jnp.where(pri == m, iota, C))
+        ok = m > NEG * 0.5
+        safe = jnp.minimum(idx, C - 1)
+        sel_url_ref[0, j] = jnp.where(ok, urls[safe], 0)
+        sel_pri_ref[0, j] = m
+        sel_mask_ref[0, j] = ok
+        idx_out_ref[0, j] = safe
+        # harvest the popped cell's cash and zero it in the same pass
+        cash_ref[0, j] = jnp.where(ok, tab[safe], 0.0)
+        hit = (iota == idx) & ok
+        pri = jnp.where(hit, NEG, pri)
+        valid_new = valid_new & ~hit
+        tab = jnp.where(hit, 0.0, tab)
+    pri_out_ref[0] = pri
+    valid_out_ref[0] = valid_new
+    table_out_ref[0] = tab
+
+
 def frontier_select(url, pri, valid, *, k: int, interpret: bool = False,
                     return_idx: bool = False):
     """url/pri/valid: (R, C). Returns (sel_url, sel_pri, sel_mask (R,k),
     pri', valid') — plus the popped cell indices (R, k) int32 when
-    ``return_idx`` (the extended contract; exercised through the
-    "interpret" registration — flipping it on for the COMPILED pallas path
-    awaits TPU validation, see ROADMAP)."""
+    ``return_idx`` (the extended contract, compiled AND interpreted — the
+    extra output block is part of the production pallas path now)."""
     R, C = url.shape
     kernel = functools.partial(_kernel, k=k)
     k_spec = pl.BlockSpec((1, k), lambda r: (r, 0))
@@ -76,3 +111,33 @@ def frontier_select(url, pri, valid, *, k: int, interpret: bool = False,
         out_shape=out_shape,
         interpret=interpret,
     )(url, pri, valid)
+
+
+def select_harvest_kernel(url, pri, valid, table, *, k: int,
+                          interpret: bool = False):
+    """url/pri/valid/table: (R, C). Returns (sel_url, sel_pri, sel_mask,
+    pri', valid', idx, cash (R, k), table') — top-k pop fused with the
+    url-lane cash harvest: each popped cell's cash lands in ``cash`` and
+    the cell is zeroed in ``table'`` within the same VMEM residency."""
+    R, C = url.shape
+    kernel = functools.partial(_harvest_kernel, k=k)
+    k_spec = pl.BlockSpec((1, k), lambda r: (r, 0))
+    c_spec = pl.BlockSpec((1, C), lambda r: (r, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(R,),
+        in_specs=[c_spec] * 4,
+        out_specs=[k_spec, k_spec, k_spec, c_spec, c_spec, k_spec, k_spec,
+                   c_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, k), url.dtype),
+            jax.ShapeDtypeStruct((R, k), jnp.float32),
+            jax.ShapeDtypeStruct((R, k), jnp.bool_),
+            jax.ShapeDtypeStruct((R, C), jnp.float32),
+            jax.ShapeDtypeStruct((R, C), jnp.bool_),
+            jax.ShapeDtypeStruct((R, k), jnp.int32),
+            jax.ShapeDtypeStruct((R, k), jnp.float32),
+            jax.ShapeDtypeStruct((R, C), jnp.float32),
+        ],
+        interpret=interpret,
+    )(url, pri, valid, table)

@@ -6,11 +6,14 @@ implementations and exposes the jitted entry point.
 Extended contract (DESIGN.md §13 sharp edge): ``select(..., return_idx=True)``
 additionally returns the popped cell indices (R, k) int32, so url-lane
 orderings harvest their frontier-cell-aligned value table from the select
-itself instead of recomputing its top-k. "ref" and "interpret" surface the
-indices natively; the COMPILED pallas path stays on the original 5-output
-contract (flipping its extra output block on awaits TPU validation —
-ROADMAP), so this wrapper recomputes the indices for it from the pre-pop
-arrays — exactly the computation the caller used to do.
+itself instead of recomputing its top-k. Every implementation — including
+the COMPILED pallas path, whose extra output block is now flipped on —
+surfaces the indices natively; the top_k recompute fallback remains only
+for out-of-tree registrations that predate the extended contract.
+
+This module also hosts the fused SELECT+HARVEST family (``select_harvest``,
+DESIGN.md §15): the same pop plus the url-lane cash gather and popped-cell
+zeroing in one launch, for url-lane orderings (opic_url).
 """
 from functools import partial
 
@@ -20,8 +23,9 @@ from jax import lax
 
 from repro.core.frontier import NEG
 from repro.kernels import registry
-from repro.kernels.frontier_select.frontier_select import frontier_select
-from repro.kernels.frontier_select.ref import select_ref
+from repro.kernels.frontier_select.frontier_select import (
+    frontier_select, select_harvest_kernel)
+from repro.kernels.frontier_select.ref import select_harvest_ref, select_ref
 
 registry.register("frontier_select", "ref", select_ref, cpu_default=True)
 registry.register("frontier_select", "pallas",
@@ -29,8 +33,16 @@ registry.register("frontier_select", "pallas",
 registry.register("frontier_select", "interpret",
                   partial(frontier_select, interpret=True))
 
+registry.register("select_harvest", "ref", select_harvest_ref,
+                  cpu_default=True)
+registry.register("select_harvest", "pallas",
+                  partial(select_harvest_kernel, interpret=False),
+                  tpu_default=True)
+registry.register("select_harvest", "interpret",
+                  partial(select_harvest_kernel, interpret=True))
+
 # implementations that honor return_idx themselves
-_IDX_NATIVE = ("ref", "interpret")
+_IDX_NATIVE = ("ref", "interpret", "pallas")
 
 
 @partial(jax.jit, static_argnames=("k", "impl", "return_idx"))
@@ -53,3 +65,12 @@ def select(url, pri, valid, *, k: int, impl: str = "ref",
     out = registry.dispatch("frontier_select", resolved, url, pri, valid,
                             k=k)
     return (*out, idx)
+
+
+@partial(jax.jit, static_argnames=("k", "impl"))
+def select_harvest(url, pri, valid, table, *, k: int, impl: str = "ref"):
+    """url/pri/valid/table: (R, C). Fused pop + url-lane cash harvest.
+    Returns (sel_url, sel_pri, sel_mask (R,k), pri', valid', idx (R,k)
+    int32, cash (R,k) f32, table' with popped cells zeroed)."""
+    return registry.dispatch("select_harvest", impl, url, pri, valid, table,
+                             k=k)

@@ -3,9 +3,28 @@
 The ref impl surfaces popped cell indices natively (``return_idx`` — the
 extended frontier_select contract url-lane orderings use to harvest their
 cell-aligned value table without recomputing the top-k).
+
+``select_harvest_ref`` is the oracle for the fused SELECT+HARVEST family
+(DESIGN.md §15): the same pop composed with the url-lane gather + popped-
+cell zeroing that core/stages.allocate used to do as three separate XLA
+ops after the select.
 """
+import jax.numpy as jnp
+
 from repro.core.frontier import select_arrays
 
 
 def select_ref(url, pri, valid, *, k: int, return_idx: bool = False):
     return select_arrays(url, pri, valid, k=k, return_idx=return_idx)
+
+
+def select_harvest_ref(url, pri, valid, table, *, k: int):
+    """url/pri/valid/table: (R, C). Returns (sel_url, sel_pri, sel_mask,
+    pri', valid', idx, cash (R, k), table')."""
+    R, C = url.shape
+    su, sp, sm, pri2, valid2, idx = select_arrays(url, pri, valid, k=k,
+                                                  return_idx=True)
+    cash = jnp.where(sm, jnp.take_along_axis(table, idx, axis=1), 0.0)
+    rows = jnp.arange(R)[:, None]
+    table2 = table.at[rows, jnp.where(sm, idx, C)].set(0.0, mode="drop")
+    return su, sp, sm, pri2, valid2, idx, cash, table2

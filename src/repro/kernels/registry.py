@@ -41,20 +41,25 @@ _CPU_DEFAULT: Dict[str, str] = {}
 _TPU_DEFAULT: Dict[str, str] = {}
 
 
+# families hosted by another family's ops.py rather than their own package
+# (the fused select+harvest shares frontier_select's module)
+_HOSTED = {"select_harvest": "frontier_select"}
+
+
 def _ensure(kernel: str) -> None:
     """Registration happens when a family's ops.py imports; callers that hit
     the registry before touching the ops module (CLIs, benchmarks) trigger
     that import here by naming convention: repro.kernels.<kernel>.ops."""
     if kernel in _REGISTRY:
         return
-    mod = f"repro.kernels.{kernel}.ops"
+    mod = f"repro.kernels.{_HOSTED.get(kernel, kernel)}.ops"
     try:
         importlib.import_module(mod)
     except ModuleNotFoundError as e:
         # only a genuinely absent module means "no such kernel" — a broken
         # import inside an existing ops.py must surface, not be rewritten
         # into a misleading unknown-kernel KeyError
-        if e.name not in (mod, f"repro.kernels.{kernel}"):
+        if e.name not in (mod, mod.rsplit(".", 1)[0]):
             raise
 
 

@@ -19,23 +19,30 @@ Lifecycle (the ``url_lane`` machinery in core/stages.py, DESIGN.md §13):
   * init    — every domain slot starts with 1.0 slot cash; the URL lane is
     empty (cash reaches URLs only by circulating through fetches).
   * pop     — ``allocate`` harvests each popped URL's cell into
-    ``StepCarry.url_cash`` and zeroes the cell; give-backs (fetch budget,
-    dead shard, politeness deferral) re-deposit at the URL's NEW cell via
-    ``frontier.insert_valued``.
+    ``StepCarry.url_cash`` and zeroes the cell — one fused
+    ``frontier.select_harvest`` launch under ``cfg.fused_dispatch`` (the
+    default; DESIGN.md §15), or a select + gather + table rewrite when
+    unfused; give-backs (fetch budget, dead shard, politeness deferral)
+    re-deposit at the URL's NEW cell via ``frontier.insert_valued``.
   * spend   — the update stage banks each fetched page's spend — its own
     harvested cash plus an equal share of its slot's prior cash — into slot
     history and splits it 1/O over the page's outlinks; ALL contributions
     ride the stages' conserved value channel (``link_cash`` ->
     ``staging_val`` -> the dispatch payload lane), local and remote alike.
   * deliver — the dispatcher drops a received URL's cash into the exact
-    frontier cell the URL wins (``kernels/opic_update.scatter_cash_cells``,
-    the widened scatter family — ref | pallas | interpret, bit-identical).
-    A Bloom-duplicate arrival whose URL is STILL QUEUED accumulates into
-    the existing cell — classic OPIC, cash grows with in-link rate; only
-    arrivals with no queued twin, unowned URLs, and bucket/row overflow
-    REFUND to the receiving row's slot cash. ``frontier.rescore`` then
-    re-buckets every queued URL from its current cell cash (FIFO arrival
-    stamps preserved) — one whole-queue re-prioritization per exchange.
+    frontier cell the URL wins. A Bloom-duplicate arrival whose URL is
+    STILL QUEUED accumulates into the existing cell — classic OPIC, cash
+    grows with in-link rate; only arrivals with no queued twin, unowned
+    URLs, and bucket/row overflow REFUND to the receiving row's slot cash.
+    Under ``cfg.fused_dispatch`` the Bloom probe+insert, the queued-twin
+    match, and the twin deposit are ONE ``kernels/dedup_deposit`` pass and
+    fresh survivors enter via ``frontier.place_valued`` at placeholder
+    priorities (the rescore fold); unfused, the twin match materializes a
+    (r_slots, M, C) tensor and deposits via
+    ``kernels/opic_update.scatter_cash_cells`` — bit-identical either way.
+    ``frontier.rescore`` then re-buckets every queued URL from its current
+    cell cash (FIFO arrival stamps preserved) — one whole-queue
+    re-prioritization per exchange, and the fused path's ONLY score pass.
   * bound   — the lane is a fixed (n_slots, frontier_capacity) block; every
     evicted or dropped value refunds to the owning slot, never grows the
     table, so memory stays O(frontier), not O(URLs discovered).

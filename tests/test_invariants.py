@@ -30,6 +30,10 @@ The kernel implementation is selectable via the ``REPRO_KERNEL_IMPL`` env
 var, and the coordination mode of the base ordering x partitioning grid via
 ``REPRO_COORDINATION`` — the CI test-matrix job replays this suite per
 kernel implementation and adds an exchange-vs-batched coordination cell.
+``REPRO_FUSED_DISPATCH=0`` replays everything through the UNFUSED dispatch
+composition (the fused-path semantics oracle, DESIGN.md §15) — the CI
+matrix carries that cell too, so cash conservation and lane alignment are
+property-checked with the fused kernels on and off.
 
 The multi-shard variant (4 crawl shards, real C4 heal) runs as a slow
 subprocess test below with fixed schedules.
@@ -57,6 +61,7 @@ KERNEL_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "auto")
 # coordination mode of the base ordering x partitioning grid (the CI matrix
 # adds a "batched" cell); a small quota forces the outbox to actually carry
 COORDINATION = os.environ.get("REPRO_COORDINATION", "exchange")
+FUSED = os.environ.get("REPRO_FUSED_DISPATCH", "1") != "0"
 
 COMBOS = [(o, p) for o in orderings() for p in PT.policies()]
 
@@ -83,7 +88,7 @@ def _session(ordering: str, partitioning: str,
                      partitioning=partitioning, kernel_impl=KERNEL_IMPL,
                      coordination=coordination,
                      comm_quota=6 if coordination == "batched" else -1,
-                     link_pop_bias=1.0)
+                     link_pop_bias=1.0, fused_dispatch=FUSED)
         _SESSIONS[key] = CrawlSession(cfg, _MESH)
     return _SESSIONS[key].reset()
 

@@ -167,3 +167,178 @@ def test_pack_unpack_roundtrip():
     from repro.kernels.bloom.bloom import pack_bits, unpack_bits
     bits = jnp.asarray(RNG.integers(0, 2, (3, 1 << 10)), jnp.uint8)
     assert (np.asarray(unpack_bits(pack_bits(bits))) == np.asarray(bits)).all()
+
+
+# ---------------------------------------------------------------------------
+# fused dedup+deposit (Bloom probe + queued-twin match + cash deposit)
+# ---------------------------------------------------------------------------
+
+def _dedup_inputs(R, M, C, b, *, queue_fill=0.7, dup_frac=0.5, seed=0):
+    """Adversarial fixture: ~dup_frac of the arrivals are URLs already in
+    the Bloom filter — half of those still queued (twin deposits), half
+    fetched-and-gone (refunds) — the rest fresh; plus whatever false
+    positives the filter produces on its own."""
+    rng = np.random.default_rng(seed)
+    f_url = jnp.asarray(rng.integers(1, 1 << 20, (R, C)), jnp.uint32)
+    f_valid = jnp.asarray(rng.random((R, C)) < queue_fill)
+    table = jnp.asarray(rng.random((R, C)), jnp.float32) * f_valid
+    gone = jnp.asarray(rng.integers(1 << 20, 1 << 21, (R, M)), jnp.uint32)
+    fresh = jnp.asarray(rng.integers(1 << 21, 1 << 22, (R, M)), jnp.uint32)
+    pick = rng.random((R, M))
+    urls = jnp.where(pick < dup_frac / 2, f_url[:, :M] if C >= M else
+                     jnp.tile(f_url, (1, -(-M // C)))[:, :M],
+                     jnp.where(pick < dup_frac, gone, fresh))
+    mask = jnp.asarray(rng.random((R, M)) < 0.8)
+    val = jnp.asarray(rng.random((R, M)), jnp.float32)
+    # filter state: queued + gone URLs inserted up front
+    bits = jnp.zeros((R, 1 << b), jnp.uint8)
+    from repro.kernels.bloom.ops import probe_insert
+    _, bits = probe_insert(bits, f_url, f_valid, k=3, impl="ref")
+    _, bits = probe_insert(bits, gone, jnp.ones_like(mask), k=3, impl="ref")
+    return bits, urls, mask, val, f_url, f_valid, table
+
+
+@pytest.mark.parametrize("impl", ["interpret", "interpret_packed"])
+@pytest.mark.parametrize("R,M,C,b", [(1, 64, 32, 10), (4, 96, 64, 12),
+                                     (2, 256, 128, 11)])
+def test_dedup_deposit_bit_identical(R, M, C, b, impl):
+    from repro.kernels.dedup_deposit.ops import dedup_deposit
+    args = _dedup_inputs(R, M, C, b, seed=R * M + C)
+    ref = dedup_deposit(*args, k=3, impl="ref", url_tile=32)
+    got = dedup_deposit(*args, k=3, impl=impl, url_tile=32)
+    for name, a, g in zip(("seen", "bits", "table", "refund"), ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(g),
+                                      err_msg=f"{impl}: {name} diverged")
+
+
+@pytest.mark.parametrize("queue_fill", [0.0, 1.0])
+def test_dedup_deposit_queue_edges(queue_fill):
+    """Empty queues: every dup refunds (no twins). Full queues: every
+    queued dup deposits."""
+    from repro.kernels.dedup_deposit.ops import dedup_deposit
+    args = _dedup_inputs(2, 64, 32, 10, queue_fill=queue_fill, seed=5)
+    ref = dedup_deposit(*args, k=3, impl="ref", url_tile=32)
+    got = dedup_deposit(*args, k=3, impl="interpret", url_tile=32)
+    for a, g in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(g))
+    seen, _, table2, refund = ref
+    bits, urls, mask, val, f_url, f_valid, table = args
+    if queue_fill == 0.0:
+        # no queued twins: the table is untouched, all seen value refunds
+        np.testing.assert_array_equal(np.asarray(table2), np.asarray(table))
+        np.testing.assert_allclose(
+            np.asarray(refund),
+            np.where(np.asarray(seen), np.asarray(val), 0.0).sum(1),
+            rtol=1e-6)
+    else:
+        assert float(np.asarray(seen).sum()) > 0
+        # conservation: deposited + refunded == total seen value
+        dep = (np.asarray(table2) - np.asarray(table)).sum(1)
+        np.testing.assert_allclose(
+            dep + np.asarray(refund),
+            np.where(np.asarray(seen), np.asarray(val), 0.0).sum(1),
+            rtol=1e-5)
+
+
+def test_dedup_deposit_matches_unfused_composition():
+    """The fused kernel must reproduce the unfused dispatch composition
+    (probe_insert -> (R, M, C) twin match -> cell scatter) bit-for-bit on
+    distinct arrivals — the exact-dedup upstream contract."""
+    from repro.kernels.bloom.ops import probe_insert
+    from repro.kernels.dedup_deposit.ops import dedup_deposit
+    args = _dedup_inputs(4, 128, 64, 12, seed=9)
+    bits, urls, mask, val, f_url, f_valid, table = args
+    # make arrivals distinct per row (exact_dedup upstream guarantee)
+    u = np.asarray(urls).copy()
+    m = np.asarray(mask).copy()
+    for r in range(u.shape[0]):
+        _, first = np.unique(u[r], return_index=True)
+        keep = np.zeros(u.shape[1], bool)
+        keep[first] = True
+        m[r] &= keep
+    urls, mask = jnp.asarray(u), jnp.asarray(m)
+    seen_u, bits_u = probe_insert(bits, urls, mask, k=3, impl="ref")
+    seen_u = np.asarray(seen_u) & np.asarray(mask)
+    twin = (u[:, :, None] == np.asarray(f_url)[:, None, :]) \
+        & np.asarray(f_valid)[:, None, :] & seen_u[:, :, None]
+    hit = twin.any(-1)
+    cell = twin.argmax(-1)
+    tab = np.asarray(table).copy()
+    rows, cols = np.nonzero(hit)
+    tab[rows, cell[rows, cols]] += np.asarray(val)[rows, cols]
+    refund_u = np.where(seen_u & ~hit, np.asarray(val), 0.0).sum(1)
+    seen, bits2, table2, refund = dedup_deposit(
+        bits, urls, mask, val, f_url, f_valid, table, k=3, impl="ref")
+    np.testing.assert_array_equal(np.asarray(seen), seen_u)
+    np.testing.assert_array_equal(np.asarray(bits2), np.asarray(bits_u))
+    np.testing.assert_array_equal(np.asarray(table2), tab)
+    np.testing.assert_allclose(np.asarray(refund), refund_u, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused select+harvest (pop + url-lane cash gather + cell zeroing)
+# ---------------------------------------------------------------------------
+
+def _harvest_inputs(R, C, *, fill=0.6, seed=0):
+    """Crawl-realistic rows: invalid cells hold NEG priority and exactly
+    0.0 cash (the lane invariant select_harvest's targeted zeroing relies
+    on), priorities unique per row (the FIFO tie-break)."""
+    from repro.core.frontier import NEG
+    rng = np.random.default_rng(seed)
+    url = jnp.asarray(rng.integers(1, 1 << 24, (R, C)), jnp.uint32)
+    valid = jnp.asarray(rng.random((R, C)) < fill)
+    pri = jnp.where(valid,
+                    jnp.asarray(rng.permutation(R * C).reshape(R, C),
+                                jnp.float32), NEG)
+    table = jnp.asarray(rng.random((R, C)), jnp.float32) * valid
+    return url, pri, valid, table
+
+
+@pytest.mark.parametrize("fill", [0.0, 0.6, 1.0])
+@pytest.mark.parametrize("R,C,k", [(4, 64, 4), (2, 128, 8)])
+def test_select_harvest_bit_identical(R, C, k, fill):
+    from repro.kernels.frontier_select.ops import select_harvest
+    args = _harvest_inputs(R, C, fill=fill, seed=R * C + k)
+    ref = select_harvest(*args, k=k, impl="ref")
+    got = select_harvest(*args, k=k, impl="interpret")
+    names = ("sel_url", "sel_pri", "sel_mask", "pri2", "valid2", "idx",
+             "cash", "table2")
+    # masked selection lanes are unspecified by the family contract (same
+    # as plain frontier_select) — canonicalize them before comparing; the
+    # post-state planes and the harvested cash must agree everywhere
+    sm = np.asarray(ref[2])
+    lane = {"sel_url", "sel_pri", "idx"}
+    for name, a, g in zip(names, ref, got):
+        a, g = np.asarray(a), np.asarray(g)
+        if name in lane:
+            a, g = np.where(sm, a, 0), np.where(sm, g, 0)
+        np.testing.assert_array_equal(a, g, err_msg=f"{name} diverged")
+
+
+def test_select_harvest_matches_unfused_composition():
+    """select(return_idx) + gather + invalid-cell mask == select_harvest."""
+    from repro.kernels.frontier_select.ops import select, select_harvest
+    url, pri, valid, table = _harvest_inputs(4, 64, seed=3)
+    k = 6
+    su, sp, sm, pri2, valid2, idx = select(url, pri, valid, k=k, impl="ref",
+                                           return_idx=True)
+    cash_u = np.where(np.asarray(sm),
+                      np.take_along_axis(np.asarray(table), np.asarray(idx),
+                                         axis=1), 0.0)
+    table_u = np.where(np.asarray(valid2), np.asarray(table), 0.0)
+    out = select_harvest(url, pri, valid, table, k=k, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out[6]), cash_u)
+    np.testing.assert_array_equal(np.asarray(out[7]), table_u)
+    for a, b in zip((su, sp, sm, pri2, valid2), out[:5]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_select_pallas_return_idx_native():
+    """The compiled-pallas select surfaces popped indices natively now
+    (the ROADMAP sharp edge) — the registry must not fall back to the
+    top_k recompute for any registered impl."""
+    from repro.kernels.frontier_select.ops import _IDX_NATIVE
+    from repro.kernels import registry
+    assert set(registry.available("frontier_select")) <= set(_IDX_NATIVE)
+    assert set(registry.available("select_harvest")) == \
+        {"ref", "pallas", "interpret"}
