@@ -17,7 +17,7 @@ import sys
 import time
 import traceback
 
-SUITES = ("overlap", "dispatch", "kernel_dispatch", "ordering",
+SUITES = ("overlap", "dispatch", "serve", "kernel_dispatch", "ordering",
           "session_scan", "scaling", "fault", "roofline")
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent

@@ -1,0 +1,98 @@
+"""Live-serving benchmark (DESIGN.md §16): what does answering queries
+WHILE crawling cost, and what latency does the load see?
+
+Races crawl-only against crawl+serve at 2-3 open-loop load levels (queries
+per crawl step, Zipfian mix, bursty arrivals) on the same crawl config:
+
+  * crawl throughput (pages/s) with and without the interleaved query path
+    — the concurrency price of sharing the mesh;
+  * query latency p50/p95/p99 and completed QPS per level — open-loop, so
+    queueing behind the fused crawl chunk is in the numbers;
+  * freshness lag and (full runs) recall@k vs the full-index oracle.
+
+``main`` returns the measurements as a dict — ``benchmarks.run`` persists
+it as ``BENCH_serve.json``, the committed serving-perf trajectory (the PR 6
+mechanism). ``--smoke`` shrinks steps/levels for CI.
+
+    PYTHONPATH=src python -m benchmarks.serve [--smoke]
+"""
+from __future__ import annotations
+
+import sys
+
+
+def _cfg():
+    from repro.configs import get_arch
+    from repro.configs.base import scaled
+    return scaled(get_arch("webparf")[0], n_domains=8, slot_factor=2,
+                  frontier_capacity=128, fetch_batch=16, bloom_bits_log2=16,
+                  dispatch_capacity=512, url_space_log2=24,
+                  dispatch_interval=4)
+
+
+VOCAB, DOC_LEN, TOP_K = 2048, 32, 10
+
+
+def _crawl_only(cfg, steps: int) -> dict:
+    from repro.api import CrawlSession
+    sess = CrawlSession(cfg)
+    sess.run(cfg.dispatch_interval)              # compile warmup (excluded)
+    rep = sess.run(steps)
+    return dict(pages_per_sec=round(rep.pages_per_sec, 1),
+                fetched=rep.fetched, seconds=round(rep.seconds, 3))
+
+
+def _crawl_serve(cfg, steps: int, qps: float, *, recall: bool) -> dict:
+    from repro.serve import QueryLoad, ServeSession
+    sess = ServeSession(cfg, load=QueryLoad(cfg, qps=qps, seed=0),
+                        index_capacity=4096, doc_len=DOC_LEN, vocab=VOCAB,
+                        top_k=TOP_K)
+    sess.run(cfg.dispatch_interval, recall=False)   # compile warmup
+    rep = sess.run(steps, recall=recall)
+    return rep.metrics()
+
+
+def main(argv=None) -> dict:
+    args = sys.argv[1:] if argv is None else argv
+    smoke = "--smoke" in args
+    steps = 8 if smoke else 48
+    levels = {"low": 2.0, "high": 16.0} if smoke else \
+        {"low": 2.0, "med": 8.0, "high": 32.0}
+    cfg = _cfg()
+
+    print(f"== live crawl->index->serve: {steps} steps, "
+          f"levels {levels} (queries/step) ==")
+    base = _crawl_only(cfg, steps)
+    print(f"crawl-only baseline: {base['pages_per_sec']} pages/s "
+          f"({base['fetched']} pages)")
+
+    out = {"config": dict(steps=steps, n_domains=cfg.n_domains,
+                          dispatch_interval=cfg.dispatch_interval,
+                          index_capacity=4096, vocab=VOCAB,
+                          doc_len=DOC_LEN, top_k=TOP_K, smoke=smoke),
+           "crawl_only": base, "levels": {}}
+    print(f"{'level':>6s} {'qps_in':>7s} {'qps_out':>8s} {'p50_ms':>8s} "
+          f"{'p95_ms':>8s} {'p99_ms':>8s} {'lag':>5s} {'pages/s':>8s} "
+          f"{'slowdown':>9s}")
+    for name, qps in levels.items():
+        m = _crawl_serve(cfg, steps, qps, recall=not smoke)
+        m["load_qps_per_step"] = qps
+        m["crawl_slowdown"] = round(
+            base["pages_per_sec"] / max(m["pages_per_sec"], 1e-9), 3)
+        out["levels"][name] = m
+        print(f"{name:>6s} {qps:7.1f} {m['qps']:8.1f} {m['p50_ms']:8.1f} "
+              f"{m['p95_ms']:8.1f} {m['p99_ms']:8.1f} "
+              f"{m['freshness_lag_steps']:5.1f} {m['pages_per_sec']:8.1f} "
+              f"{m['crawl_slowdown']:8.2f}x")
+
+    worst = max(m["crawl_slowdown"] for m in out["levels"].values())
+    served_all = all(m["n_queries"] > 0 for m in out["levels"].values())
+    out["verdict_served_under_all_loads"] = bool(served_all)
+    out["worst_crawl_slowdown"] = worst
+    print(f"verdict: queries answered during the crawl at every level: "
+          f"{served_all}; worst crawl slowdown {worst:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,13 @@ API layering (DESIGN.md §11):
                              owns mesh/state/step-counter and the eager vs
                              fused-scan execution choice; CrawlReport is the
                              typed result every consumer reads.
+  repro/serve                the serving layer ON the session API
+                             (DESIGN.md §16): ServeSession interleaves
+                             fused crawl intervals with a batched query
+                             path over a sharded incremental index;
+                             ServeReport sits alongside CrawlReport.
+                             Re-exported here (lazily — serve imports this
+                             package) so drivers keep one import surface.
 
 Examples, launch/crawl.py, and the benchmarks all sit on this package; only
 tests and the dry-run reach below it.
@@ -21,5 +28,14 @@ from repro.api.report import (CrawlReport, harvest, overlap_metrics,
                               stats_dict)
 from repro.api.session import CrawlSession
 
-__all__ = ["CrawlSession", "CrawlReport", "harvest", "overlap_metrics",
-           "stats_dict"]
+__all__ = ["CrawlSession", "CrawlReport", "ServeSession", "ServeReport",
+           "harvest", "overlap_metrics", "stats_dict"]
+
+
+def __getattr__(name):
+    # PEP 562 lazy re-export: repro.serve sits ON repro.api, so importing
+    # it eagerly here would be circular.
+    if name in ("ServeSession", "ServeReport"):
+        from repro import serve
+        return getattr(serve, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -14,7 +14,7 @@ checkpoints/reshards with the rest of the system state.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +30,9 @@ class Index(NamedTuple):
     doc_valid: jax.Array    # (capacity,) bool
     n_docs: jax.Array       # () int32
     df: jax.Array           # (vocab,) int32 document frequencies
+    n_dropped: jax.Array    # () int32 — docs refused at capacity (never
+                            # overwritten/wrapped; the serve layer surfaces
+                            # this as index_dropped / index_full)
 
 
 def init_index(capacity: int, doc_len: int, vocab: int) -> Index:
@@ -39,13 +42,20 @@ def init_index(capacity: int, doc_len: int, vocab: int) -> Index:
         doc_valid=jnp.zeros((capacity,), bool),
         n_docs=jnp.zeros((), jnp.int32),
         df=jnp.zeros((vocab,), jnp.int32),
+        n_dropped=jnp.zeros((), jnp.int32),
     )
 
 
 def add_batch(idx: Index, urls: jax.Array, mask: jax.Array,
               cfg: CrawlConfig) -> Index:
     """Batch index update (the paper's batched index build). urls: (M,).
-    Documents beyond capacity are dropped (oldest-kept policy)."""
+
+    Documents beyond capacity are MASKED OUT (oldest-kept policy): writes
+    land in a sacrificial row past the live range so a full index never
+    wraps or overwrites an existing doc, and every refused doc is counted
+    in ``n_dropped``. Sequential adds compose bit-for-bit with one big add
+    of the concatenated stream — the incremental-indexing contract the
+    serve layer (repro/serve) relies on."""
     cap, doc_len = idx.doc_tokens.shape
     vocab = idx.df.shape[0]
     toks = W.page_tokens(urls, cfg, n_tokens=doc_len, vocab=vocab)  # (M, L)
@@ -75,24 +85,39 @@ def add_batch(idx: Index, urls: jax.Array, mask: jax.Array,
         doc_valid=put(idx.doc_valid, fits, False) | idx.doc_valid,
         n_docs=idx.n_docs + fits.sum().astype(jnp.int32),
         df=df,
+        n_dropped=idx.n_dropped + (mask & ~fits).sum().astype(jnp.int32),
     )
+
+
+def score_docs(idx: Index, query: jax.Array, *,
+               n_total: Optional[jax.Array] = None,
+               df: Optional[jax.Array] = None) -> jax.Array:
+    """Per-doc TF-IDF scores for one query: (Q,) terms -> (capacity,).
+
+    tf(d, t) = count of t in doc d; idf(t) = log(1 + N / (1 + df[t])).
+    ``n_total``/``df`` override the local doc count / document frequencies
+    with GLOBAL values — how the sharded query path (repro/serve/query.py)
+    scores each index shard against corpus-wide statistics (psum'd under
+    the mesh) so shard-local and single-index scoring agree."""
+    N = jnp.maximum((idx.n_docs if n_total is None else n_total)
+                    .astype(jnp.float32), 1.0)
+    dfreq = idx.df if df is None else df
+    idf = jnp.log1p(N / (1.0 + dfreq[query].astype(jnp.float32)))    # (Q,)
+    # tf: (docs, Q) via equality match against the doc-token matrix
+    eq = (idx.doc_tokens[:, :, None] == query[None, None, :])
+    tf = eq.sum(axis=1).astype(jnp.float32)                          # (D, Q)
+    scores = (jnp.log1p(tf) * idf[None, :]).sum(axis=1)
+    return jnp.where(idx.doc_valid, scores, -jnp.inf)
 
 
 def search(idx: Index, query: jax.Array, *, k: int = 10
            ) -> Tuple[jax.Array, jax.Array]:
     """TF-IDF retrieval. query: (Q,) hashed terms -> (scores, urls) top-k.
 
-    tf(d, t) = count of t in doc d; idf(t) = log(1 + N / (1 + df[t])).
     The (docs, Q) match computation shards over the data axis with the doc
     arrays; top-k is a single lax.top_k over doc scores."""
-    N = jnp.maximum(idx.n_docs.astype(jnp.float32), 1.0)
-    idf = jnp.log1p(N / (1.0 + idx.df[query].astype(jnp.float32)))   # (Q,)
-    # tf: (docs, Q) via equality match against the doc-token matrix
-    eq = (idx.doc_tokens[:, :, None] == query[None, None, :])
-    tf = eq.sum(axis=1).astype(jnp.float32)                          # (D, Q)
-    scores = (jnp.log1p(tf) * idf[None, :]).sum(axis=1)
-    scores = jnp.where(idx.doc_valid, scores, -jnp.inf)
-    s, i = lax.top_k(scores, k)
+    scores = score_docs(idx, query)
+    s, i = lax.top_k(scores, min(k, scores.shape[0]))
     return s, idx.doc_url[i]
 
 

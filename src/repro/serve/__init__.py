@@ -1,0 +1,13 @@
+"""repro.serve — the live crawl -> index -> serve subsystem (DESIGN.md §16).
+
+``ServeSession`` (a sibling of ``repro.api.CrawlSession``, built on it)
+interleaves fused crawl intervals with a batched, jitted query path over a
+sharded incremental index; ``QueryLoad`` generates the open-loop synthetic
+traffic; ``ServeReport`` is the typed result (latency percentiles, QPS,
+freshness lag, recall@k) alongside the embedded ``CrawlReport``.
+"""
+from repro.serve.load import QueryBatch, QueryLoad
+from repro.serve.report import ServeReport
+from repro.serve.session import ServeSession
+
+__all__ = ["ServeSession", "ServeReport", "QueryLoad", "QueryBatch"]

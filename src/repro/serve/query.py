@@ -1,0 +1,185 @@
+"""The live query path: sharded incremental indexing + batched TF-IDF serve.
+
+``core/index.py`` stays mesh-free (pure local ops on one ``Index``); this
+module owns the SPMD story, mirroring the crawler's own layering
+(core/crawler.py builds local steps, repro/api shard_maps them):
+
+  * the index is ``n_shards`` independent ``Index`` blocks — every leaf
+    grows a leading shard axis sharded like the crawl state's rows, so the
+    same mesh that runs the crawl serves the queries;
+  * **incremental add** (:func:`make_index_add`): one jitted shard_map folds
+    a dispatch interval's stacked FetchReport straight into the local index
+    block — pages a shard fetched are pages that shard indexes, no host
+    round-trip, no post-hoc harvest;
+  * **batched query** (:func:`make_query_fn`): a (B,)-batch of (seed,
+    domain) query descriptors is expanded to hashed terms in-graph, scored
+    against the local doc block with GLOBAL corpus statistics (df and N are
+    ``psum``'d across shards so shard-local scoring equals single-index
+    scoring), local top-k'd, all_gather'd, and reduced to a replicated
+    global top-k — one collective pair per batch;
+  * **oracle** (:func:`oracle_search`): the unsharded full-index reference
+    the recall@k metric compares against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.configs.base import CrawlConfig
+from repro.core import index as IX
+from repro.core.stages import FetchReport
+
+
+def init_sharded_index(n_shards: int, cap_shard: int, doc_len: int,
+                       vocab: int) -> IX.Index:
+    """An ``Index`` whose every leaf carries a leading (n_shards,) axis."""
+    one = IX.init_index(cap_shard, doc_len, vocab)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_shards,) + a.shape).copy(), one)
+
+
+def index_specs(axes) -> IX.Index:
+    """PartitionSpecs: every leaf row-sharded on its leading shard axis."""
+    return jax.tree.map(lambda _: P(axes), IX.init_index(1, 1, 1))
+
+
+def _local(idx: IX.Index) -> IX.Index:
+    """Strip the size-1 leading block axis inside a shard_map body."""
+    return jax.tree.map(lambda a: a[0], idx)
+
+
+def _blocked(idx: IX.Index) -> IX.Index:
+    return jax.tree.map(lambda a: a[None], idx)
+
+
+def make_index_add(cfg: CrawlConfig, mesh, axes):
+    """Jitted ``(index, report) -> index``: fold one interval's fetched
+    pages (stacked FetchReport leaves, ``(steps, n_slots, k)``) into each
+    shard's index block. Flattening order is (step, row, lane) — fixed, so
+    incremental per-interval adds replay bit-for-bit as one concatenated
+    batch add (test-enforced, tests/test_serve.py)."""
+    specs = index_specs(axes)
+    rep_specs = FetchReport(P(None, axes), P(None, axes))
+
+    def add_local(idx: IX.Index, rep: FetchReport) -> IX.Index:
+        l = _local(idx)
+        urls = rep.fetched_urls.reshape(-1)
+        mask = rep.fetched_mask.reshape(-1)
+        return _blocked(IX.add_batch(l, urls, mask, cfg))
+
+    return jax.jit(shard_map(add_local, mesh=mesh,
+                             in_specs=(specs, rep_specs),
+                             out_specs=specs))
+
+
+def make_query_fn(cfg: CrawlConfig, mesh, axes, *, n_terms: int, k: int):
+    """Jitted ``(index, seeds (B,), domains (B,)) -> (scores, urls) (B, k)``.
+
+    Terms are generated in-graph from the (seed, domain) descriptors
+    (``core/index.query_terms``), so the host ships 2 ints per query. The
+    global top-k is replicated on every shard (out_specs P()) — any shard
+    can answer."""
+    specs = index_specs(axes)
+
+    def query_local(idx: IX.Index, seeds: jax.Array, doms: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+        l = _local(idx)
+        cap = l.doc_tokens.shape[0]
+        vocab = l.df.shape[0]
+        # global corpus statistics: shard-local tf, corpus-wide idf
+        df_g = lax.psum(l.df, axes)
+        n_g = lax.psum(l.n_docs, axes)
+        terms = jax.vmap(
+            lambda s, d: IX.query_terms(s, n_terms, vocab, d, cfg)
+        )(seeds, doms)                                           # (B, Q)
+        scores = jax.vmap(
+            lambda t: IX.score_docs(l, t, n_total=n_g, df=df_g)
+        )(terms)                                                 # (B, cap)
+        k_l = min(k, cap)
+        s_l, i_l = lax.top_k(scores, k_l)                        # (B, k_l)
+        u_l = jnp.take(l.doc_url, i_l, axis=0)
+        # combine shard winners: gather + one global top-k, replicated
+        s_all = lax.all_gather(s_l, axes)                 # (n_shards, B, k_l)
+        u_all = lax.all_gather(u_l, axes)
+        n_sh = s_all.shape[0]
+        s_cat = jnp.transpose(s_all, (1, 0, 2)).reshape(-1, n_sh * k_l)
+        u_cat = jnp.transpose(u_all, (1, 0, 2)).reshape(-1, n_sh * k_l)
+        if n_sh * k_l < k:                          # tiny-index degenerate
+            pad = k - n_sh * k_l
+            s_cat = jnp.pad(s_cat, ((0, 0), (0, pad)),
+                            constant_values=-jnp.inf)
+            u_cat = jnp.pad(u_cat, ((0, 0), (0, pad)))
+        s_g, j = lax.top_k(s_cat, k)
+        u_g = jnp.take_along_axis(u_cat, j, axis=1)
+        return s_g, u_g
+
+    return jax.jit(shard_map(query_local, mesh=mesh,
+                             in_specs=(specs, P(), P()),
+                             out_specs=(P(), P())))
+
+
+# ---------------------------------------------------------------------------
+# the full-index oracle (recall@k reference)
+# ---------------------------------------------------------------------------
+
+def oracle_index(urls: np.ndarray, cfg: CrawlConfig, *, doc_len: int,
+                 vocab: int) -> IX.Index:
+    """One unsharded index over the COMPLETE page stream (capacity = all
+    pages): what an offline batch build with no capacity pressure and no
+    freshness lag would have served."""
+    cap = max(len(urls), 1)
+    idx = IX.init_index(cap, doc_len, vocab)
+    return IX.add_batch(idx, jnp.asarray(urls.astype(np.uint32)),
+                        jnp.ones((len(urls),), bool), cfg)
+
+
+@functools.partial(jax.jit, static_argnames=("n_terms", "k", "cfg"))
+def _oracle_topk(idx: IX.Index, seeds: jax.Array, doms: jax.Array,
+                 *, n_terms: int, k: int, cfg: CrawlConfig) -> jax.Array:
+    vocab = idx.df.shape[0]
+    terms = jax.vmap(
+        lambda s, d: IX.query_terms(s, n_terms, vocab, d, cfg))(seeds, doms)
+
+    def one(t):
+        s, i = lax.top_k(IX.score_docs(idx, t), min(k, idx.doc_valid.shape[0]))
+        u = idx.doc_url[i]
+        return jnp.where(jnp.isfinite(s), u, 0)
+
+    return lax.map(one, terms)          # sequential: keeps the (D,L,Q) match
+                                        # matrix one-query-sized
+
+
+def oracle_search(idx: IX.Index, seeds: np.ndarray, doms: np.ndarray, *,
+                  n_terms: int, k: int, cfg: CrawlConfig,
+                  chunk: int = 64) -> np.ndarray:
+    """Top-k urls (0-padded where fewer than k finite hits) per query."""
+    out = []
+    for lo in range(0, len(seeds), chunk):
+        s = jnp.asarray(seeds[lo:lo + chunk].astype(np.uint32))
+        d = jnp.asarray(doms[lo:lo + chunk].astype(np.int32))
+        out.append(np.asarray(_oracle_topk(idx, s, d, n_terms=n_terms, k=k,
+                                           cfg=cfg)))
+    return (np.concatenate(out) if out
+            else np.zeros((0, k), np.uint32))
+
+
+def recall_at_k(served: np.ndarray, oracle: np.ndarray) -> float:
+    """Mean |served ∩ oracle| / |oracle| per query (0-padding excluded)."""
+    if len(served) == 0:
+        return 0.0
+    r = []
+    for s_row, o_row in zip(served, oracle):
+        o = set(int(u) for u in o_row if u)
+        if not o:
+            continue
+        s = set(int(u) for u in s_row if u)
+        r.append(len(s & o) / len(o))
+    return float(np.mean(r)) if r else 0.0
