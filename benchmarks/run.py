@@ -18,7 +18,7 @@ import time
 import traceback
 
 SUITES = ("overlap", "dispatch", "serve", "kernel_dispatch", "ordering",
-          "session_scan", "scaling", "fault", "roofline")
+          "session_scan", "scaling", "fault", "obs_overhead", "roofline")
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
@@ -33,7 +33,8 @@ def main(argv=None) -> None:
             mod = __import__(f"benchmarks.{name}", fromlist=["main"])
             result = mod.main()
             if isinstance(result, dict):
-                out = ROOT / f"BENCH_{name}.json"
+                # a suite may pin its artifact name (obs_overhead -> obs)
+                out = ROOT / f"BENCH_{getattr(mod, 'BENCH_NAME', name)}.json"
                 out.write_text(json.dumps(result, indent=2, sort_keys=True)
                                + "\n")
                 print(f"-- wrote {out}")

@@ -31,6 +31,19 @@ def stats_dict(state) -> Dict[str, int]:
     return out
 
 
+def stats_per_shard(state) -> Dict[str, np.ndarray]:
+    """The per-shard breakdown of :func:`stats_dict`: each counter as an
+    ``(n_shards,)`` int64 vector (summing a vector recovers the summed
+    dict's entry). The skew between lanes is the load-imbalance signal the
+    telemetry layer tracks over time; this is the end-of-run view."""
+    s = np.asarray(state.stats).astype(np.int64)
+    out = {n: s[:, i].copy() for i, n in enumerate(STATS)}
+    n_shards = s.shape[0]
+    out["fifo_rebase"] = np.asarray(state.f_rebased).astype(
+        np.int64).reshape(n_shards, -1).sum(1)
+    return out
+
+
 def overlap_metrics(urls: np.ndarray, cfg) -> Dict[str, float]:
     """C1 (URL) and C2 (content) overlap over a fetched-URL trace."""
     import jax.numpy as jnp
@@ -68,6 +81,11 @@ class CrawlReport:
     stats: Dict[str, int]                # cumulative counters at run end
     seconds: float                       # wall time of the run
     cfg: Any = dataclasses.field(default=None, repr=False, compare=False)
+    stats_per_shard: Dict[str, np.ndarray] = dataclasses.field(
+        default=None, repr=False, compare=False)   # per-shard counter lanes
+    telemetry: Any = dataclasses.field(
+        default=None, repr=False, compare=False)   # obs.health.CrawlTelemetry
+                                                   # (None with telemetry off)
 
     @functools.cached_property
     def overlap(self) -> Dict[str, float]:

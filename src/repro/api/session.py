@@ -28,6 +28,7 @@ functions thread straight through.
 from __future__ import annotations
 
 import math
+import os
 import time
 from typing import Callable, Dict, Optional, Sequence, Union
 
@@ -38,7 +39,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.api.report import CrawlReport, harvest, stats_dict
+from repro.api.report import CrawlReport, harvest, stats_dict, stats_per_shard
 from repro.compat import shard_map
 from repro.configs.base import CrawlConfig
 from repro.core import classifier as CLS
@@ -47,6 +48,8 @@ from repro.core.stages import CrawlState, FetchReport, state_specs
 
 Events = Dict[int, Callable]   # step index -> state transform, applied BEFORE
                                # that step executes (session-absolute indices)
+
+_OBS_DIR = "obs"               # ledger checkpoints live beside the crawl state
 
 
 class CrawlSession:
@@ -57,13 +60,17 @@ class CrawlSession:
                  classify_accuracy: float = CLS.DEFAULT_ACCURACY,
                  stages: Optional[Sequence] = None,
                  extra_stages: Sequence = (),
-                 dispatch_stage: Optional[Callable] = None):
+                 dispatch_stage: Optional[Callable] = None,
+                 tracer=None):
         """``score_fn`` (legacy ``(urls, cfg)``) overrides the ordering
         registry's scorer (default: ``cfg.ordering`` decides, DESIGN.md §12).
         ``extra_stages`` slots scenario stages (``make_politeness_stage``,
         ``make_revisit_stage``, ...) into the assembled pipeline by their
         ``placement`` attribute; ``stages`` replaces the whole pipeline
-        verbatim (expert mode)."""
+        verbatim (expert mode). ``tracer`` shares an ``obs.Tracer`` across
+        sessions (ServeSession passes its own so crawl + serve spans land on
+        one timeline)."""
+        from repro import obs
         from repro.launch.mesh import make_host_mesh
         self.cfg = cfg
         self.mesh = mesh if mesh is not None else make_host_mesh()
@@ -82,6 +89,13 @@ class CrawlSession:
         self.state: CrawlState = init()
         self._t = 0
         self._chunk_fn = None          # built lazily on first scan use
+        # -- observability (DESIGN.md §17); off -> all hooks are dead code on
+        # the step path and the compiled programs are the untraced ones
+        self.telemetry = obs.telemetry_enabled(cfg)
+        self.tracer = tracer if tracer is not None else obs.Tracer()
+        self.ledger = (obs.LedgerBuffer(obs.ledger_metrics(cfg), self.n_shards)
+                       if self.telemetry else None)
+        self._snap_fn = None           # eager-path ledger snapshot, lazy
 
     # -- introspection ------------------------------------------------------
 
@@ -102,6 +116,8 @@ class CrawlSession:
         from repro.core.stages import init_state
         self.state = init_state(self.cfg, self.n_shards)
         self._t = 0
+        if self.telemetry:
+            self.ledger.clear()
         return self
 
     # -- the two execution paths -------------------------------------------
@@ -111,8 +127,19 @@ class CrawlSession:
         from the step counter. Returns that step's FetchReport."""
         dispatch = (self._t + 1) % self.cfg.dispatch_interval == 0
         fn = self._step_d if dispatch else self._step_f
-        self.state, rep = fn(self.state)
+        if not self.telemetry:
+            self.state, rep = fn(self.state)
+            self._t += 1
+            return rep
+        name = "step_dispatch" if dispatch else "step_fetch"
+        with self.tracer.span(name, "stage", t=self._t):
+            self.state, rep = fn(self.state)
+            row = np.asarray(self._snapshot()(self.state))
+            jax.block_until_ready(self.state)
         self._t += 1
+        self.ledger.append(self._t, row)
+        if dispatch:
+            self._emit_counters()
         return rep
 
     def run_chunk(self) -> FetchReport:
@@ -128,12 +155,61 @@ class CrawlSession:
                 f"dispatch_interval={iv}; use .step() to reach a boundary")
         if self._chunk_fn is None:
             self._chunk_fn = self._build_chunk()
-        self.state, reps = self._chunk_fn(self.state)
-        self._t += iv
+        if not self.telemetry:
+            self.state, reps = self._chunk_fn(self.state)
+            self._t += iv
+            return reps
+        with self.tracer.span("run_chunk", "stage", t=self._t, interval=iv):
+            self.state, reps, rows = self._chunk_fn(self.state)
+            rows = np.asarray(rows)           # blocks on the chunk's result
+            jax.block_until_ready(self.state)
+        t0, self._t = self._t, self._t + iv
+        self.ledger.append_block(range(t0 + 1, t0 + iv + 1), rows)
+        self._emit_counters()
         return reps
 
+    # -- telemetry plumbing --------------------------------------------------
+
+    def _snapshot(self):
+        """The eager-path ledger snapshot: the SAME ``snapshot_local`` the
+        scan path stacks, as its own jitted shard_map — identical HLO, so
+        the eager and scan ledgers are bit-identical (tests/test_obs.py)."""
+        if self._snap_fn is None:
+            from repro.obs import ledger as OL
+            cfg, axes = self.cfg, self.axes
+            self._snap_fn = jax.jit(shard_map(
+                lambda st: OL.snapshot_local(cfg, axes, st), mesh=self.mesh,
+                in_specs=(state_specs(axes),), out_specs=P(axes)))
+        return self._snap_fn
+
+    def _emit_counters(self) -> None:
+        """Counter events at each dispatch boundary — the ledger tail as
+        Chrome ``C`` rows (one series per shard)."""
+        tail = self.ledger.tail()
+        for metric in ("frontier_depth", "staging_fill"):
+            if metric in tail:
+                self.tracer.counter(metric, {
+                    f"shard{i}": v for i, v in enumerate(tail[metric])})
+
+    def telemetry_report(self, *, start: int = 0):
+        """The session's :class:`~repro.obs.health.CrawlTelemetry` (ledger
+        window from record ``start`` + every span so far); None when off."""
+        if not self.telemetry:
+            return None
+        from repro.obs.health import CrawlTelemetry
+        steps, rows = self.ledger.arrays()
+        return CrawlTelemetry(steps=steps[start:], rows=rows[start:],
+                              names=self.ledger.names,
+                              interval=self.cfg.dispatch_interval,
+                              spans=tuple(self.tracer.events))
+
     def _build_chunk(self):
-        """One jitted shard_map whose body scans the whole interval."""
+        """One jitted shard_map whose body scans the whole interval. With
+        telemetry on, each scanned step also emits its ledger row — an extra
+        stacked ``(iv, 1, n_metrics)`` output per shard (global
+        ``(iv, n_shards, n_metrics)``), never a host callback. The snapshot
+        only READS state, so the crawl trajectory is bit-identical either
+        way (tests/test_obs.py pins it)."""
         cfg, axes = self.cfg, self.axes
         local = CR.make_crawl_step(cfg, n_shards=self.n_shards, axes=axes,
                                    **self._kw)
@@ -141,6 +217,28 @@ class CrawlSession:
         # stacked reports grow a leading (unsharded) time axis
         rep_specs = FetchReport(P(None, axes), P(None, axes))
         iv = cfg.dispatch_interval
+
+        if self.telemetry:
+            from repro.obs import ledger as OL
+
+            def chunk_local(state):
+                def body(st, _):
+                    st, rep = local(st, dispatch=False)
+                    return st, (rep, OL.snapshot_local(cfg, axes, st))
+                state, (reps, rows) = lax.scan(body, state, None,
+                                               length=iv - 1)
+                state, rep_d = local(state, dispatch=True)
+                reps = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b[None]], 0),
+                    reps, rep_d)
+                rows = jnp.concatenate(
+                    [rows, OL.snapshot_local(cfg, axes, state)[None]], 0)
+                return state, reps, rows
+
+            return jax.jit(shard_map(chunk_local, mesh=self.mesh,
+                                     in_specs=(specs,),
+                                     out_specs=(specs, rep_specs,
+                                                P(None, axes))))
 
         def chunk_local(state):
             state, reps = lax.scan(lambda st, _: local(st, dispatch=False),
@@ -186,6 +284,7 @@ class CrawlSession:
                     f"events (t={self._t}, steps={steps}, interval={iv})")
 
         url_parts, per_step = [], []
+        led0 = len(self.ledger) if self.telemetry else 0
         t0 = time.time()
         while self._t < t_end:
             t = self._t
@@ -206,7 +305,9 @@ class CrawlSession:
         return CrawlReport(urls=urls,
                            per_step=np.asarray(per_step, np.int64),
                            stats=stats_dict(self.state), seconds=seconds,
-                           cfg=self.cfg)
+                           cfg=self.cfg,
+                           stats_per_shard=stats_per_shard(self.state),
+                           telemetry=self.telemetry_report(start=led0))
 
     # -- C4 fault controls --------------------------------------------------
 
@@ -214,6 +315,9 @@ class CrawlSession:
         """Mark crawl process(es) dead (wraps ``crawler.mark_dead``)."""
         shards = [shards] if isinstance(shards, int) else list(shards)
         self.state = CR.mark_dead(self.state, shards)
+        if self.telemetry:
+            self.tracer.instant("inject_failure", "fault", t=self._t,
+                                shards=list(shards))
         return self
 
     def heal(self, shards: Union[int, Sequence[int], None] = None
@@ -233,19 +337,48 @@ class CrawlSession:
         if not shards:
             raise ValueError("heal: no dead shards in state and none given")
         self.state = heal_crawler(self.state, self.cfg, shards, self.n_shards)
+        if self.telemetry:
+            self.tracer.instant("heal", "fault", t=self._t,
+                                shards=list(shards))
         return self
 
     # -- persistence (train/checkpoint.py) ----------------------------------
 
     def checkpoint(self, ckpt_dir: str, *, keep: int = 3) -> str:
-        """Write the full crawl state atomically; returns the path."""
+        """Write the full crawl state atomically; returns the path. With
+        telemetry on, the ledger time-series checkpoints alongside (an
+        ``obs/`` subdir) so a restore continues it instead of forgetting."""
         from repro.train import checkpoint as ckpt
-        return ckpt.save(ckpt_dir, self._t, self.state, keep=keep)
+        if not self.telemetry:
+            return ckpt.save(ckpt_dir, self._t, self.state, keep=keep)
+        with self.tracer.span("checkpoint", "io", step=self._t):
+            path = ckpt.save(ckpt_dir, self._t, self.state, keep=keep)
+            steps, rows = self.ledger.arrays()
+            ckpt.save(os.path.join(ckpt_dir, _OBS_DIR), self._t,
+                      {"steps": steps, "rows": rows}, keep=keep)
+        return path
 
     def restore(self, ckpt_dir: str, *, step: Optional[int] = None
                 ) -> "CrawlSession":
         """Restore state (latest step by default) and resync the counter."""
         from repro.train import checkpoint as ckpt
-        self.state = ckpt.restore(ckpt_dir, self.state, step=step)
-        self._t = int(np.asarray(self.state.step))
+        if not self.telemetry:
+            self.state = ckpt.restore(ckpt_dir, self.state, step=step)
+            self._t = int(np.asarray(self.state.step))
+            return self
+        with self.tracer.span("restore", "io"):
+            self.state = ckpt.restore(ckpt_dir, self.state, step=step)
+            self._t = int(np.asarray(self.state.step))
+            # ledger shapes come from the file — any-length target works
+            target = {"steps": np.zeros((0,), np.int64),
+                      "rows": np.zeros(
+                          (0, self.n_shards, len(self.ledger.names)),
+                          np.float32)}
+            try:
+                led = ckpt.restore(os.path.join(ckpt_dir, _OBS_DIR), target,
+                                   step=self._t)
+                self.ledger.load(np.asarray(led["steps"]),
+                                 np.asarray(led["rows"]))
+            except FileNotFoundError:
+                self.ledger.clear()    # pre-telemetry checkpoint: start fresh
         return self

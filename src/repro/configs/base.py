@@ -243,6 +243,16 @@ class CrawlConfig:
                                       # "ref" | "pallas" | "interpret" | "auto"
                                       # (auto = Pallas on TPU, ref elsewhere;
                                       # resolved by kernels/registry.py)
+    telemetry: bool = False           # observability layer (DESIGN.md §17):
+                                      # collect the per-shard, per-step load
+                                      # ledger inside the step/scan (extra
+                                      # stacked device output — no host
+                                      # callbacks in the hot path) and attach
+                                      # a wall-clock span tracer to the
+                                      # session. Off = bit-for-bit the
+                                      # untraced program (test-enforced).
+                                      # REPRO_TELEMETRY=1 flips it on
+                                      # globally (CI invariants cell).
     fused_dispatch: bool = True       # fuse the dispatch hot path (DESIGN.md
                                       # §15): Bloom probe + queued-twin match
                                       # + cash deposit in one dedup_deposit

@@ -96,6 +96,23 @@ def _rebase_fifo(f: Frontier, incoming: jax.Array) -> Frontier:
     return lax.cond(need.any(), compact, lambda fr: fr, f)
 
 
+def bucket_occupancy(priority: jax.Array, valid: jax.Array,
+                     n_buckets: int) -> jax.Array:
+    """Valid-URL count per priority bucket, summed over rows -> (n_buckets,)
+    f32. Inverts ``encode_priority``'s bucket half (pri = b*RANGE - a with
+    a in [0, RANGE) means ceil(pri/RANGE) recovers b exactly). This is the
+    queue-occupancy read of the telemetry ledger (repro/obs/ledger.py,
+    DESIGN.md §17) — a pure reduction over the row arrays, safe to trace
+    inside the fused scan. One-hot compare + sum rather than scatter-add:
+    XLA CPU serializes scatters, and this runs every step of the fused
+    chunk (benchmarks/obs_overhead.py prices it)."""
+    b = jnp.ceil(priority / _FIFO_RANGE).astype(jnp.int32)
+    b = jnp.clip(b, 0, n_buckets - 1)
+    b = jnp.where(valid, b, -1).reshape(-1)
+    hot = b[:, None] == jnp.arange(n_buckets, dtype=jnp.int32)[None, :]
+    return hot.sum(0).astype(jnp.float32)
+
+
 def select_arrays(url: jax.Array, priority: jax.Array, valid: jax.Array,
                   *, k: int, return_idx: bool = False) -> Tuple[jax.Array, ...]:
     """Pure-XLA top-k pop on raw row arrays — the "ref" implementation the

@@ -194,6 +194,28 @@ def _with_lane(order_state: jax.Array, table: jax.Array,
     return out if refund is None else out.at[:, 0].add(refund)
 
 
+def ledger_view(state: CrawlState) -> Dict[str, object]:
+    """The telemetry snapshot hook (DESIGN.md §17): the shard-local state
+    slices ``repro.obs.ledger.snapshot_local`` is allowed to read, named by
+    role rather than by leaf. This module owns the CrawlState layout, so a
+    state refactor updates this one mapping and every ledger metric keeps
+    meaning what it says. The contract: every value is a read-only view of
+    the LOCAL shard's slice (under shard_map), the snapshot derives pure
+    reductions from them (no host callbacks — it runs inside the fused
+    scan), and nothing here may mutate state."""
+    return dict(
+        frontier=frontier_view(state),      # local rows (r_local, C)
+        stats=state.stats,                  # (1, NSTAT) this shard's counters
+        staging_n=state.staging_n,          # (1,) outbound URL backlog
+        staging_val=state.staging_val,      # (1, S) in-transit cash
+        outbox_n=state.outbox_n,            # (1,) parked URL backlog
+        outbox_val=state.outbox_val,        # (1, B) parked cash
+        order_state=state.order_state,      # (r_local, ORD_WIDTH[+C])
+        shard_alive=state.shard_alive,      # (n_shards,) replicated
+        step=state.step,                    # () replicated
+    )
+
+
 def apply_delta(state: CrawlState, delta: StatsDelta) -> CrawlState:
     """Fold a stage's stat increments into the shard-local stats row."""
     stats = state.stats

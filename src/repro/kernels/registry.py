@@ -29,8 +29,10 @@ and dispatch is one call::
 """
 from __future__ import annotations
 
+import functools
 import importlib
-from typing import Callable, Dict, Tuple
+import os
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 
@@ -39,6 +41,24 @@ IMPLS = ("ref", "pallas", "interpret", "auto")
 _REGISTRY: Dict[str, Dict[str, Callable]] = {}
 _CPU_DEFAULT: Dict[str, str] = {}
 _TPU_DEFAULT: Dict[str, str] = {}
+
+# kernel-launch annotation (DESIGN.md §17): when on, every resolved launch
+# is wrapped in jax.named_scope("kernel/<family>.<impl>") so device profiles
+# and HLO dumps label each kernel-family region. Pure metadata — named_scope
+# changes NO numerics, so telemetry bit-identity holds with it on.
+_ANNOTATE: Optional[bool] = None       # None -> read REPRO_TRACE_KERNELS
+
+
+def set_annotations(on: Optional[bool]) -> None:
+    """Force kernel-launch annotation on/off (None -> env default)."""
+    global _ANNOTATE
+    _ANNOTATE = on
+
+
+def annotations_enabled() -> bool:
+    if _ANNOTATE is not None:
+        return _ANNOTATE
+    return os.environ.get("REPRO_TRACE_KERNELS", "0") not in ("", "0")
 
 
 # families hosted by another family's ops.py rather than their own package
@@ -110,7 +130,16 @@ def resolve_impl(kernel: str, impl: str = "auto") -> str:
 
 
 def resolve(kernel: str, impl: str = "auto") -> Callable:
-    return _REGISTRY[kernel][resolve_impl(kernel, impl)]
+    impl = resolve_impl(kernel, impl)
+    fn = _REGISTRY[kernel][impl]
+    if not annotations_enabled():
+        return fn
+
+    @functools.wraps(fn)
+    def annotated(*args, **kwargs):
+        with jax.named_scope(f"kernel/{kernel}.{impl}"):
+            return fn(*args, **kwargs)
+    return annotated
 
 
 def dispatch(kernel: str, impl: str, *args, **kwargs):

@@ -64,7 +64,15 @@ def main(argv=None):
     ap.add_argument("--fail-shard", type=int, default=-1)
     ap.add_argument("--fail-at", type=int, default=-1)
     ap.add_argument("--heal-at", type=int, default=-1)
+    ap.add_argument("--trace", action="store_true",
+                    help="enable telemetry (repro.obs): per-shard load "
+                         "ledger + span tracing; prints the per-interval "
+                         "shard-load timeline at the end")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write the Chrome trace_event file (.json or "
+                         ".jsonl) with the ledger embedded; implies --trace")
     args = ap.parse_args(argv)
+    trace = args.trace or bool(args.trace_out)
 
     cfg = scaled(get_arch("webparf")[0], n_domains=args.domains,
                  frontier_capacity=args.capacity, fetch_batch=args.fetch_batch,
@@ -72,7 +80,8 @@ def main(argv=None):
                  bloom_bits_log2=16, dispatch_capacity=1024,
                  url_space_log2=24, partitioning=args.partitioning,
                  ordering=args.ordering, kernel_impl=args.kernel_impl,
-                 coordination=args.coordination, comm_quota=args.comm_quota)
+                 coordination=args.coordination, comm_quota=args.comm_quota,
+                 telemetry=trace)
     from repro.core import stages as ST
     extra = []
     if args.politeness >= 0:
@@ -142,6 +151,16 @@ def main(argv=None):
           f"pages ({oq['hot_pages']} hubs), coverage AUC "
           f"{oq['coverage_auc']:.3f}")
     print("stats:", sd)
+
+    if trace:
+        from repro.launch.trace_report import render_report
+        tel = sess.telemetry_report()
+        print(f"\n{render_report(tel)}")
+        if args.trace_out:
+            path = sess.tracer.write(args.trace_out, tel)
+            print(f"\ntrace written: {path} "
+                  f"({len(sess.tracer.events)} events; load in "
+                  f"chrome://tracing or repro.launch.trace_report)")
     return 0
 
 

@@ -55,7 +55,14 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default="",
                     help="checkpoint mid-run and restore-resume (demo of "
                          "the serve-state round-trip)")
+    ap.add_argument("--trace", action="store_true",
+                    help="enable telemetry (repro.obs): crawl ledger + "
+                         "serve spans on one timeline")
+    ap.add_argument("--trace-out", default="", metavar="PATH",
+                    help="write the Chrome trace_event file (.json or "
+                         ".jsonl); implies --trace")
     args = ap.parse_args(argv)
+    trace = args.trace or bool(args.trace_out)
 
     cfg = scaled(get_arch("webparf")[0], n_domains=args.domains,
                  frontier_capacity=args.capacity,
@@ -63,7 +70,8 @@ def main(argv=None):
                  dispatch_interval=args.dispatch_interval,
                  bloom_bits_log2=16, dispatch_capacity=1024,
                  url_space_log2=24, partitioning=args.partitioning,
-                 ordering=args.ordering, coordination=args.coordination)
+                 ordering=args.ordering, coordination=args.coordination,
+                 telemetry=trace)
     load = QueryLoad(cfg, qps=args.qps, seed=args.load_seed,
                      burst_mult=args.burst_mult)
     sess = ServeSession(cfg, load=load, index_capacity=args.index_capacity,
@@ -111,6 +119,16 @@ def main(argv=None):
     print(f"\nwhole run: {total_q} queries in {total_s:.1f}s "
           f"({total_q / max(total_s, 1e-9):.1f} qps) while crawling "
           f"{sum(r.crawl.fetched for r in reports)} pages")
+
+    if trace:
+        from repro.launch.trace_report import render_report
+        tel = sess.crawl.telemetry_report()
+        print(f"\n{render_report(tel)}")
+        if args.trace_out:
+            path = sess.tracer.write(args.trace_out, tel)
+            print(f"\ntrace written: {path} "
+                  f"({len(sess.tracer.events)} events; load in "
+                  f"chrome://tracing or repro.launch.trace_report)")
     return 0
 
 

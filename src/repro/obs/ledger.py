@@ -1,0 +1,154 @@
+"""The per-shard load ledger (DESIGN.md §17).
+
+``snapshot_local`` is the device half: a pure reduction over the shard-local
+state slices exposed by ``core.stages.ledger_view`` producing one
+``(1, n_metrics)`` f32 row per shard per step. It is traced INSIDE the
+session's step functions — in the fused ``run_chunk`` scan it rides as an
+extra stacked output, so collecting it costs a few reductions and one extra
+leaf in the chunk's existing device->host transfer, never a host callback.
+Because it only READS state, the crawl trajectory with telemetry on is
+bit-identical to telemetry off (tests/test_obs.py pins it), and because the
+same local function runs in both the eager and scan paths, the eager and
+scan LEDGERS are bit-identical too.
+
+A dead shard's row is zeroed at the source (multiplied by its
+``shard_alive`` flag) — after a C4 failure the lane reads 0, not whatever
+stale frontier the corpse still holds; the ``alive`` metric itself is the
+mask downstream health math uses to average over live shards only.
+
+``LedgerBuffer`` is the host half: it accumulates rows as the session runs
+and round-trips through ``train.checkpoint`` (an ``obs/`` subdir next to
+the crawl state) so a restored session continues its time-series instead of
+forgetting it.
+
+Counters come from the cumulative ``CrawlState.stats`` rows, stored as f32
+— exact up to 2^24 events per shard per counter, beyond any test or bench
+horizon here; derived metrics difference them per interval anyway.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import CrawlConfig
+from repro.core import frontier as F
+from repro.core import stages as ST
+from repro.ordering.policies import ORD_URL0
+
+# the fixed metric columns; per-bucket queue occupancy columns follow
+# (``queue_b0``..``queue_b{n_buckets-1}`` — ledger_metrics(cfg) names them)
+LEDGER_BASE: Tuple[str, ...] = (
+    "alive",            # 1.0 while this shard lives, 0.0 after a C4 failure
+    "frontier_depth",   # queued URLs across the shard's frontier rows
+    "fetch_backlog",    # queued URLs beyond one step's fetch budget
+    "staging_fill",     # URLs staged for the next dispatch exchange
+    "outbox_fill",      # URLs parked in the batched mode's outbox
+    "cash_mass",        # ordering cash held locally (slots + URL lane +
+                        # in-transit staging/outbox values)
+    "fetched",          # cumulative stats counters (per shard) ...
+    "fetch_foreign",
+    "dispatch_sent",
+    "dispatch_recv",
+    "coord_dropped",
+    "coord_deferred",
+)
+
+
+def ledger_metrics(cfg: CrawlConfig) -> Tuple[str, ...]:
+    """Metric column names for this config (bucket count is config-shaped)."""
+    return LEDGER_BASE + tuple(
+        f"queue_b{b}" for b in range(cfg.n_priority_buckets))
+
+
+def snapshot_local(cfg: CrawlConfig, axes, state: ST.CrawlState) -> jax.Array:
+    """One shard's ledger row, ``(1, n_metrics)`` f32 — shard-local, pure,
+    jittable inside the scan. ``axes`` are the crawler mesh axis names
+    (``lax.axis_index`` recovers which shard this is)."""
+    view = ST.ledger_view(state)
+    shard = lax.axis_index(axes).astype(jnp.int32)
+    alive = view["shard_alive"][shard].astype(jnp.float32)
+    fr: F.Frontier = view["frontier"]
+    stats = view["stats"][0]
+
+    depth = fr.valid.sum().astype(jnp.float32)
+    backlog = jnp.maximum(depth - jnp.float32(cfg.fetch_batch), 0.0)
+    order_state = view["order_state"]
+    cash = (order_state[:, 0].sum() + order_state[:, ORD_URL0:].sum()
+            + view["staging_val"].sum() + view["outbox_val"].sum())
+
+    def stat(name):
+        return stats[ST.SIDX[name]].astype(jnp.float32)
+
+    row = jnp.stack([
+        jnp.float32(1.0),
+        depth,
+        backlog,
+        view["staging_n"][0].astype(jnp.float32),
+        view["outbox_n"][0].astype(jnp.float32),
+        cash,
+        stat("fetched"),
+        stat("fetch_foreign"),
+        stat("dispatch_sent"),
+        stat("dispatch_recv"),
+        stat("coord_dropped"),
+        stat("coord_deferred"),
+    ])
+    occ = F.bucket_occupancy(fr.priority, fr.valid, cfg.n_priority_buckets)
+    return (jnp.concatenate([row, occ]) * alive)[None]
+
+
+class LedgerBuffer:
+    """Host-side accumulator for ledger rows: the session appends one
+    ``(n_shards, n_metrics)`` row per step (or one stacked block per fused
+    chunk) and drivers read the whole ``(n_records, n_shards, n_metrics)``
+    series back via :meth:`arrays`."""
+
+    def __init__(self, names: Tuple[str, ...], n_shards: int):
+        self.names = tuple(names)
+        self.n_shards = int(n_shards)
+        self._steps: List[int] = []
+        self._rows: List[np.ndarray] = []
+
+    def __len__(self) -> int:
+        return len(self._steps)
+
+    def index(self, name: str) -> int:
+        return self.names.index(name)
+
+    def append(self, step: int, row) -> None:
+        row = np.asarray(row, np.float32)
+        assert row.shape == (self.n_shards, len(self.names)), row.shape
+        self._steps.append(int(step))
+        self._rows.append(row)
+
+    def append_block(self, steps, rows) -> None:
+        """One fused chunk's stacked rows: (T, n_shards, n_metrics)."""
+        rows = np.asarray(rows, np.float32)
+        for s, r in zip(steps, rows):
+            self.append(s, r)
+
+    def arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        steps = np.asarray(self._steps, np.int64)
+        rows = (np.stack(self._rows) if self._rows
+                else np.zeros((0, self.n_shards, len(self.names)), np.float32))
+        return steps, rows
+
+    def load(self, steps, rows) -> None:
+        """Replace contents (checkpoint restore)."""
+        self._steps = [int(s) for s in np.asarray(steps)]
+        self._rows = [np.asarray(r, np.float32) for r in np.asarray(rows)]
+
+    def clear(self) -> None:
+        self._steps, self._rows = [], []
+
+    def tail(self) -> Dict[str, np.ndarray]:
+        """Latest row as {metric: (n_shards,)} — live dashboards / counters."""
+        if not self._rows:
+            return {}
+        last = self._rows[-1]
+        return {n: last[:, i] for i, n in enumerate(self.names)}

@@ -47,6 +47,9 @@ class ServeReport:
     index: Dict[str, int]                # n_docs / dropped / capacity ...
     recall_at_k: Optional[float] = None  # vs the full-index oracle
     cfg: Any = dataclasses.field(default=None, repr=False, compare=False)
+    telemetry: Any = dataclasses.field(
+        default=None, repr=False, compare=False)   # obs.health.ServeTelemetry
+                                                   # (None with telemetry off)
 
     # -- latency / throughput ----------------------------------------------
 
@@ -97,6 +100,10 @@ class ServeReport:
                    serve_seconds=round(self.serve_seconds, 3))
         if self.recall_at_k is not None:
             out[f"recall_at_{self.k}"] = round(self.recall_at_k, 4)
+        if self.telemetry is not None:
+            tel = self.telemetry.crawl.metrics()
+            out["load_imbalance_mean"] = tel.get("load_imbalance_mean", 0.0)
+            out["load_imbalance_max"] = tel.get("load_imbalance_max", 0.0)
         return out
 
     def summary(self) -> str:

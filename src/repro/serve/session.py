@@ -42,7 +42,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.api.report import CrawlReport, harvest, stats_dict
+from repro.api.report import (CrawlReport, harvest, stats_dict,
+                              stats_per_shard)
 from repro.api.session import CrawlSession
 from repro.configs.base import CrawlConfig
 from repro.serve import query as Q
@@ -69,6 +70,9 @@ class ServeSession:
         self.crawl = CrawlSession(cfg, mesh, **crawl_kw)
         self.cfg = cfg
         self.n_shards = self.crawl.n_shards
+        # one timeline: serve spans land on the crawl session's tracer
+        self.telemetry = self.crawl.telemetry
+        self.tracer = self.crawl.tracer
         if index_capacity % self.n_shards:
             raise ValueError(f"index_capacity={index_capacity} must divide "
                              f"over {self.n_shards} shards")
@@ -137,6 +141,7 @@ class ServeSession:
         url_parts: List[np.ndarray] = []
         per_step: List[int] = []
         crawl_secs = serve_secs = 0.0
+        led0 = len(self.crawl.ledger) if self.telemetry else 0
         run_w0 = time.perf_counter()
 
         for _ in range(steps // iv):
@@ -168,12 +173,15 @@ class ServeSession:
                 url_parts.extend(u)
 
         seconds = time.perf_counter() - run_w0
+        crawl_tel = self.crawl.telemetry_report(start=led0)
         crawl_rep = CrawlReport(
             urls=(np.concatenate(url_parts) if url_parts
                   else np.array([], np.uint32)),
             per_step=np.asarray(per_step, np.int64),
             stats=stats_dict(self.crawl.state), seconds=crawl_secs,
-            cfg=self.cfg)
+            cfg=self.cfg,
+            stats_per_shard=stats_per_shard(self.crawl.state),
+            telemetry=crawl_tel)
         top_u_a = (np.concatenate(top_u) if top_u
                    else np.zeros((0, self.top_k), np.uint32))
         top_s_a = (np.concatenate(top_s) if top_s
@@ -182,13 +190,21 @@ class ServeSession:
         if recall and len(top_u_a) and self._all_urls:
             rec = self._oracle_recall(
                 np.concatenate(q_seed), np.concatenate(q_dom), top_u_a)
+        lat_a = np.asarray(lat, np.float64)
+        lags_a = np.asarray(lags, np.int64)
+        serve_tel = None
+        if crawl_tel is not None:
+            from repro.obs.health import ServeTelemetry
+            serve_tel = ServeTelemetry(crawl=crawl_tel, lag_steps=lags_a,
+                                       latency_ms=lat_a)
         return ServeReport(
-            crawl=crawl_rep, latency_ms=np.asarray(lat, np.float64),
+            crawl=crawl_rep, latency_ms=lat_a,
             arrival_step=np.asarray(arr, np.float64),
-            lag_steps=np.asarray(lags, np.int64),
+            lag_steps=lags_a,
             top_urls=top_u_a, top_scores=top_s_a, k=self.top_k,
             seconds=seconds, serve_seconds=serve_secs,
-            index=self.index_stats(), recall_at_k=rec, cfg=self.cfg)
+            index=self.index_stats(), recall_at_k=rec, cfg=self.cfg,
+            telemetry=serve_tel)
 
     def _serve(self, qb: QueryBatch, t_start: int, t_now: int,
                w0: float, w1: float, lat, arr, lags, top_u, top_s) -> float:
@@ -207,9 +223,16 @@ class ServeSession:
             seeds[:n] = qb.seed[lo:lo + n]
             doms[:n] = qb.domain[lo:lo + n]
             b0 = time.perf_counter()
-            s, u = self._query_fn(self.index, jnp.asarray(seeds),
-                                  jnp.asarray(doms))
-            jax.block_until_ready((s, u))
+            if self.telemetry:
+                with self.tracer.span("query_batch", "serve", n=n,
+                                      lag_steps=lag):
+                    s, u = self._query_fn(self.index, jnp.asarray(seeds),
+                                          jnp.asarray(doms))
+                    jax.block_until_ready((s, u))
+            else:
+                s, u = self._query_fn(self.index, jnp.asarray(seeds),
+                                      jnp.asarray(doms))
+                jax.block_until_ready((s, u))
             done = time.perf_counter()
             spent += done - b0
             lat.extend((done - arrival_wall[lo:lo + n]) * 1e3)
@@ -220,8 +243,15 @@ class ServeSession:
         return spent
 
     def _flush_pending(self) -> None:
-        for rep in self._pending:
-            self.index = self._add_fn(self.index, rep)
+        if self.telemetry and self._pending:
+            with self.tracer.span("index_fold", "serve",
+                                  n_intervals=len(self._pending)):
+                for rep in self._pending:
+                    self.index = self._add_fn(self.index, rep)
+                jax.block_until_ready(self.index)
+        else:
+            for rep in self._pending:
+                self.index = self._add_fn(self.index, rep)
         self._pending = []
         self._watermark = self.crawl.t
 
