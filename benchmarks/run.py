@@ -18,7 +18,8 @@ import time
 import traceback
 
 SUITES = ("overlap", "dispatch", "serve", "kernel_dispatch", "ordering",
-          "session_scan", "scaling", "fault", "obs_overhead", "roofline")
+          "session_scan", "scaling", "fault", "rebalance", "obs_overhead",
+          "roofline")
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 

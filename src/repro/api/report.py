@@ -86,6 +86,11 @@ class CrawlReport:
     telemetry: Any = dataclasses.field(
         default=None, repr=False, compare=False)   # obs.health.CrawlTelemetry
                                                    # (None with telemetry off)
+    rebalances: Tuple = dataclasses.field(
+        default=(), repr=False, compare=False)     # RebalanceEvents applied
+                                                   # during this run (elastic
+                                                   # repartitioning,
+                                                   # DESIGN.md §18)
 
     @functools.cached_property
     def overlap(self) -> Dict[str, float]:
@@ -133,4 +138,8 @@ class CrawlReport:
         if self.overlap and self.overlap["fetched"]:
             line += (f", url_dup {100 * self.overlap['url_dup']:.2f}%"
                      f", content_dup {100 * self.overlap['content_dup']:.2f}%")
+        if self.rebalances:
+            moved = sum(len(e.moves) for e in self.rebalances)
+            line += (f", {len(self.rebalances)} rebalances "
+                     f"({moved} domains migrated)")
         return line

@@ -96,6 +96,19 @@ class CrawlSession:
         self.ledger = (obs.LedgerBuffer(obs.ledger_metrics(cfg), self.n_shards)
                        if self.telemetry else None)
         self._snap_fn = None           # eager-path ledger snapshot, lazy
+        # -- load-driven elastic repartitioning (DESIGN.md §18): a host-side
+        # control-plane check at dispatch boundaries, like inject_failure/
+        # heal. Disabled (threshold <= 0) means the hook is never consulted
+        # and the trajectory is bit-identical to a build without it.
+        self.rebalance_events: list = []
+        self._rebalance = None
+        if cfg.rebalance_threshold > 0:
+            if not self.telemetry:
+                raise ValueError(
+                    "rebalance_threshold > 0 needs telemetry=True: the "
+                    "trigger signal is the ledger's load-imbalance factor")
+            from repro.rebalance import get_rebalance
+            self._rebalance = get_rebalance(cfg.rebalance)
 
     # -- introspection ------------------------------------------------------
 
@@ -116,6 +129,7 @@ class CrawlSession:
         from repro.core.stages import init_state
         self.state = init_state(self.cfg, self.n_shards)
         self._t = 0
+        self.rebalance_events = []
         if self.telemetry:
             self.ledger.clear()
         return self
@@ -134,12 +148,14 @@ class CrawlSession:
         name = "step_dispatch" if dispatch else "step_fetch"
         with self.tracer.span(name, "stage", t=self._t):
             self.state, rep = fn(self.state)
-            row = np.asarray(self._snapshot()(self.state))
+            row = np.asarray(self._snapshot()(
+                self.state, jnp.float32(1.0 if dispatch else 0.0)))
             jax.block_until_ready(self.state)
         self._t += 1
         self.ledger.append(self._t, row)
         if dispatch:
             self._emit_counters()
+            self.maybe_rebalance()
         return rep
 
     def run_chunk(self) -> FetchReport:
@@ -166,6 +182,7 @@ class CrawlSession:
         t0, self._t = self._t, self._t + iv
         self.ledger.append_block(range(t0 + 1, t0 + iv + 1), rows)
         self._emit_counters()
+        self.maybe_rebalance()
         return reps
 
     # -- telemetry plumbing --------------------------------------------------
@@ -178,8 +195,9 @@ class CrawlSession:
             from repro.obs import ledger as OL
             cfg, axes = self.cfg, self.axes
             self._snap_fn = jax.jit(shard_map(
-                lambda st: OL.snapshot_local(cfg, axes, st), mesh=self.mesh,
-                in_specs=(state_specs(axes),), out_specs=P(axes)))
+                lambda st, d: OL.snapshot_local(cfg, axes, st, dispatch=d),
+                mesh=self.mesh,
+                in_specs=(state_specs(axes), P()), out_specs=P(axes)))
         return self._snap_fn
 
     def _emit_counters(self) -> None:
@@ -224,7 +242,8 @@ class CrawlSession:
             def chunk_local(state):
                 def body(st, _):
                     st, rep = local(st, dispatch=False)
-                    return st, (rep, OL.snapshot_local(cfg, axes, st))
+                    return st, (rep, OL.snapshot_local(cfg, axes, st,
+                                                       dispatch=False))
                 state, (reps, rows) = lax.scan(body, state, None,
                                                length=iv - 1)
                 state, rep_d = local(state, dispatch=True)
@@ -232,7 +251,8 @@ class CrawlSession:
                     lambda a, b: jnp.concatenate([a, b[None]], 0),
                     reps, rep_d)
                 rows = jnp.concatenate(
-                    [rows, OL.snapshot_local(cfg, axes, state)[None]], 0)
+                    [rows, OL.snapshot_local(cfg, axes, state,
+                                             dispatch=True)[None]], 0)
                 return state, reps, rows
 
             return jax.jit(shard_map(chunk_local, mesh=self.mesh,
@@ -285,6 +305,7 @@ class CrawlSession:
 
         url_parts, per_step = [], []
         led0 = len(self.ledger) if self.telemetry else 0
+        reb0 = len(self.rebalance_events)
         t0 = time.time()
         while self._t < t_end:
             t = self._t
@@ -307,7 +328,8 @@ class CrawlSession:
                            stats=stats_dict(self.state), seconds=seconds,
                            cfg=self.cfg,
                            stats_per_shard=stats_per_shard(self.state),
-                           telemetry=self.telemetry_report(start=led0))
+                           telemetry=self.telemetry_report(start=led0),
+                           rebalances=tuple(self.rebalance_events[reb0:]))
 
     # -- C4 fault controls --------------------------------------------------
 
@@ -341,6 +363,59 @@ class CrawlSession:
             self.tracer.instant("heal", "fault", t=self._t,
                                 shards=list(shards))
         return self
+
+    # -- load-driven elastic repartitioning (DESIGN.md §18) ------------------
+
+    def _windowed_imbalance(self) -> float:
+        """The trigger signal: mean load-imbalance factor over the last
+        ``cfg.rebalance_window`` dispatch-boundary ledger records."""
+        from repro.obs.health import CrawlTelemetry
+        steps, rows = self.ledger.arrays()
+        tel = CrawlTelemetry(steps=steps, rows=rows, names=self.ledger.names,
+                             interval=self.cfg.dispatch_interval)
+        imb = tel.per_interval().imbalance()
+        if not len(imb):
+            return 1.0
+        w = max(self.cfg.rebalance_window, 1)
+        return float(imb[-w:].mean())
+
+    def maybe_rebalance(self):
+        """Host-side control-plane check, run automatically at every dispatch
+        boundary when ``cfg.rebalance_threshold > 0``: if the windowed
+        load-imbalance factor exceeds the threshold, ask the configured
+        rebalance policy for a live->live migration plan and apply it through
+        the same cash-conserving ``apply_rebalance`` machinery heals use.
+        Returns the recorded :class:`~repro.rebalance.RebalanceEvent`, or
+        None (disabled / under threshold / no profitable move)."""
+        if self._rebalance is None:
+            return None
+        trigger = self._windowed_imbalance()
+        if trigger <= self.cfg.rebalance_threshold:
+            return None
+        from repro.ordering import ORD_URL0
+        from repro.core import partitioner as PT
+        from repro.rebalance import RebalanceEvent
+        state = self.state
+        row_depth = np.asarray(state.f_valid).sum(axis=1).astype(np.float64)
+        os_ = np.asarray(state.order_state, np.float64)
+        row_cash = os_[:, 0] + os_[:, ORD_URL0:].sum(axis=1)
+        dm = PT.DomainMap(state.slot_of_domain, state.slot_domain,
+                          state.shard_alive)
+        decision = self._rebalance.plan(self.cfg, dm, row_depth, row_cash)
+        if decision is None:
+            return None
+        with self.tracer.span("rebalance", "rebalance", t=self._t,
+                              n_moves=len(decision.moves)):
+            self.state = CR.apply_rebalance(state, self.cfg,
+                                            decision.new_map)
+            jax.block_until_ready(self.state)
+        event = RebalanceEvent(step=self._t, trigger=trigger,
+                               moves=decision.moves,
+                               imbalance_before=decision.imbalance_before,
+                               imbalance_after=decision.imbalance_after)
+        self.rebalance_events.append(event)
+        self.tracer.instant("rebalance", "rebalance", **event.asdict())
+        return event
 
     # -- persistence (train/checkpoint.py) ----------------------------------
 

@@ -253,6 +253,26 @@ class CrawlConfig:
                                       # untraced program (test-enforced).
                                       # REPRO_TELEMETRY=1 flips it on
                                       # globally (CI invariants cell).
+    rebalance: str = "hot_domain"     # load-driven elastic repartitioning
+                                      # policy (repro.rebalance registry,
+                                      # DESIGN.md §18): which domains leave
+                                      # the peak shard when the trigger fires
+    rebalance_threshold: float = 0.0  # arm the elastic rebalancer: when the
+                                      # windowed load-imbalance factor
+                                      # (CrawlTelemetry.imbalance, max/mean
+                                      # frontier depth over live shards)
+                                      # EXCEEDS this at a dispatch boundary,
+                                      # migrate hot domains to cold shards.
+                                      # <= 0 disables (the default — the
+                                      # crawl trajectory is then bit-identical
+                                      # to a build without the feature;
+                                      # test-enforced). Requires telemetry.
+    rebalance_window: int = 2         # dispatch boundaries averaged into the
+                                      # trigger signal (sliding window — one
+                                      # noisy interval doesn't fire a
+                                      # migration)
+    rebalance_max_domains: int = 4    # max domains migrated per decision
+                                      # (bounds one decision's gather traffic)
     fused_dispatch: bool = True       # fuse the dispatch hot path (DESIGN.md
                                       # §15): Bloom probe + queued-twin match
                                       # + cash deposit in one dedup_deposit

@@ -114,20 +114,26 @@ def mark_dead(state: CrawlState, shard_ids) -> CrawlState:
     return state._replace(shard_alive=alive)
 
 
+# the row-indexed CrawlState leaves a remap migrates (everything whose
+# leading axis is a frontier SLOT); named explicitly so migrate_rows never
+# guesses by shape
+MIGRATED_ROWS = ("f_url", "f_pri", "f_valid", "f_arrival", "f_dropped",
+                 "f_inserted", "f_rebased", "bloom_bits", "order_state")
+
+
 def apply_rebalance(state: CrawlState, cfg: CrawlConfig,
                     new_dm: "PT.DomainMap") -> CrawlState:
-    """C4: migrate frontier/bloom rows to their new owners after a remap.
+    """Migrate frontier/bloom rows to their new owners after a remap — the
+    shared mechanism under both C4 heals (dead->live) and load-driven
+    elastic moves (live->live, DESIGN.md §18).
 
     Jittable; under pjit the row permutation is a cross-shard gather — the
     real migration traffic a production system would pay."""
     old_dm = PT.DomainMap(state.slot_of_domain, state.slot_domain,
                           state.shard_alive)
     moved = PT.migrate_rows(
-        dict(f_url=state.f_url, f_pri=state.f_pri, f_valid=state.f_valid,
-             f_arrival=state.f_arrival, f_dropped=state.f_dropped,
-             f_inserted=state.f_inserted, f_rebased=state.f_rebased,
-             bloom_bits=state.bloom_bits, order_state=state.order_state),
-        old_dm, new_dm)
+        {k: getattr(state, k) for k in MIGRATED_ROWS},
+        old_dm, new_dm, rows=MIGRATED_ROWS)
     # migrate_rows is a gather, so a moved domain's row survives as a stale
     # COPY at its old (now unmapped) slot. Frontier rows there are inert
     # (the old slot belongs to a dead shard), but order_state carries
@@ -164,6 +170,23 @@ def apply_rebalance(state: CrawlState, cfg: CrawlConfig,
     moved["order_state"] = moved["order_state"].at[
         jnp.where(merged, tgt, slots.shape[0]), 0].add(
         merge_cash, mode="drop")
+    # live->live moves leave the stale source copy on a shard that KEEPS
+    # crawling: the old owner would fetch the twin queue again (C1
+    # duplication) and its event counters would double-count. Clear every
+    # vacated row whose shard is alive in the new map; the moved copy at the
+    # new slot is now the only one. Dead-shard vacated rows stay untouched
+    # (inert until a future rebalance overwrites them), so C4 heals are
+    # bit-identical to before this branch existed. order_state at these
+    # slots is already dup-scrubbed above, so cash stays exact.
+    n_shards = new_dm.shard_alive.shape[0]
+    vacated_live = dup & new_dm.shard_alive[
+        PT.shard_of_slot(slots, slots.shape[0], n_shards)]
+    for k in MIGRATED_ROWS:
+        if k == "order_state":
+            continue
+        a = moved[k]
+        mask = vacated_live.reshape((-1,) + (1,) * (a.ndim - 1))
+        moved[k] = jnp.where(mask, jnp.zeros_like(a), a)
     return state._replace(
         **moved, slot_domain=new_dm.domain_of_slot,
         slot_of_domain=new_dm.slot_of_domain, shard_alive=new_dm.shard_alive)

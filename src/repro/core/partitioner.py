@@ -79,11 +79,28 @@ def seed_frontier(cfg: CrawlConfig, n_shards: int) -> F.Frontier:
     return F.insert(f, by_slot, scores, mask, n_buckets=cfg.n_priority_buckets)
 
 
+def _free_slot(domain_of_slot: np.ndarray, shard: int, per: int) -> int:
+    """First free slot on ``shard``; -1 if the shard is full."""
+    for tslot in range(shard * per, (shard + 1) * per):
+        if domain_of_slot[tslot] < 0:
+            return tslot
+    return -1
+
+
 def rebalance(dm: DomainMap, dead_shards: Sequence[int], *,
-              loads: np.ndarray | None = None) -> DomainMap:
+              loads: np.ndarray | None = None,
+              domain_loads: np.ndarray | None = None) -> DomainMap:
     """C4: redistribute a dead shard's domains over surviving shards,
     balanced by current load (least-loaded first). Host-side control plane —
-    this is a scheduler decision, not device compute."""
+    this is a scheduler decision, not device compute.
+
+    ``loads`` is the current per-shard load in whatever unit the caller
+    balances by (frontier depth for heals). ``domain_loads`` is the
+    per-domain estimate in the SAME unit: each placement credits the placed
+    domain's own weight to its target, so successive placements spread.
+    Without it every placement credits +1 — correct only when ``loads``
+    count domains, and the unit mix used to pile every orphan of a hot
+    shard onto the single least-loaded survivor."""
     slot_of_domain = np.asarray(dm.slot_of_domain).copy()
     domain_of_slot = np.asarray(dm.domain_of_slot).copy()
     alive = np.asarray(dm.shard_alive).copy()
@@ -98,6 +115,9 @@ def rebalance(dm: DomainMap, dead_shards: Sequence[int], *,
         loads = np.zeros(n_shards)
     loads = loads.astype(np.float64).copy()
 
+    def credit(d):
+        return 1.0 if domain_loads is None else float(domain_loads[d])
+
     for s in dead_shards:
         for slot in range(s * per, (s + 1) * per):
             d = domain_of_slot[slot]
@@ -107,15 +127,13 @@ def rebalance(dm: DomainMap, dead_shards: Sequence[int], *,
             order = live[np.argsort(loads[live], kind="stable")]
             placed = False
             for tgt_shard in order:
-                for tslot in range(tgt_shard * per, (tgt_shard + 1) * per):
-                    if domain_of_slot[tslot] < 0:
-                        domain_of_slot[tslot] = d
-                        domain_of_slot[slot] = -1
-                        slot_of_domain[d] = tslot
-                        loads[tgt_shard] += 1
-                        placed = True
-                        break
-                if placed:
+                tslot = _free_slot(domain_of_slot, tgt_shard, per)
+                if tslot >= 0:
+                    domain_of_slot[tslot] = d
+                    domain_of_slot[slot] = -1
+                    slot_of_domain[d] = tslot
+                    loads[tgt_shard] += credit(d)
+                    placed = True
                     break
             if not placed:
                 # no free slots: merge into the least-loaded shard's matching
@@ -124,24 +142,133 @@ def rebalance(dm: DomainMap, dead_shards: Sequence[int], *,
                 tslot = tgt_shard * per + (d % per)
                 slot_of_domain[d] = tslot
                 domain_of_slot[slot] = -1
-                loads[tgt_shard] += 1
+                loads[tgt_shard] += credit(d)
     return DomainMap(jnp.asarray(slot_of_domain), jnp.asarray(domain_of_slot),
                      jnp.asarray(alive))
 
 
-def migrate_rows(arrs, old_map: DomainMap, new_map: DomainMap):
+def move_domain(dm: DomainMap, domain: int, target_slot: int) -> DomainMap:
+    """Elementary live->live move: remap one domain into a FREE slot (same
+    shard allowed — slot defrag). The row migration itself happens in
+    ``crawler.apply_rebalance``; this only rewrites the maps."""
+    slot_of_domain = np.asarray(dm.slot_of_domain).copy()
+    domain_of_slot = np.asarray(dm.domain_of_slot).copy()
+    slot = int(slot_of_domain[domain])
+    if domain_of_slot[slot] != domain:
+        raise ValueError(f"move_domain: domain {domain} shares slot {slot} "
+                         f"(merged) — cannot move it independently")
+    if domain_of_slot[target_slot] >= 0:
+        raise ValueError(f"move_domain: target slot {target_slot} is "
+                         f"occupied by domain {int(domain_of_slot[target_slot])}")
+    domain_of_slot[target_slot] = domain
+    domain_of_slot[slot] = -1
+    slot_of_domain[domain] = target_slot
+    return DomainMap(jnp.asarray(slot_of_domain), jnp.asarray(domain_of_slot),
+                     dm.shard_alive)
+
+
+def migrate_domains(dm: DomainMap, domains: Sequence[int], *,
+                    loads: np.ndarray,
+                    domain_loads: np.ndarray | None = None,
+                    limit: int | None = None,
+                    improve_only: bool = False
+                    ) -> Tuple[DomainMap, list]:
+    """Live->live elastic migration (DESIGN.md §18): move each candidate
+    domain, in the given order, to the least-loaded OTHER live shard with a
+    free slot. Unlike :func:`rebalance` there is never a merge fallback — a
+    load-driven move that finds no free slot is simply skipped (merging
+    queues is a fault necessity, not a load optimization).
+
+    ``loads`` — (n_shards,) current load; ``domain_loads`` — (n_domains,)
+    per-domain weight in the same unit (each move debits the source and
+    credits the target so successive moves spread). ``improve_only`` skips
+    moves that would not strictly lower the source/target pair's peak.
+    Returns ``(new_map, moves)`` with ``moves = [(domain, src_shard,
+    dst_shard), ...]``; shard liveness is unchanged."""
+    slot_of_domain = np.asarray(dm.slot_of_domain).copy()
+    domain_of_slot = np.asarray(dm.domain_of_slot).copy()
+    alive = np.asarray(dm.shard_alive)
+    n_slots = len(domain_of_slot)
+    n_shards = len(alive)
+    per = n_slots // n_shards
+    live = np.where(alive)[0]
+    loads = np.asarray(loads, np.float64).copy()
+    moves: list = []
+    if len(live) < 2:
+        return dm, moves
+    for d in domains:
+        if limit is not None and len(moves) >= limit:
+            break
+        d = int(d)
+        slot = int(slot_of_domain[d])
+        if domain_of_slot[slot] != d:
+            continue                   # merged domain shares a row: skip
+        src_shard = slot // per
+        w = 1.0 if domain_loads is None else float(domain_loads[d])
+        placed = None
+        for tgt_shard in live[np.argsort(loads[live], kind="stable")]:
+            if tgt_shard == src_shard:
+                continue
+            tslot = _free_slot(domain_of_slot, tgt_shard, per)
+            if tslot >= 0:
+                placed = (int(tgt_shard), tslot)
+                break
+        if placed is None:
+            continue
+        tgt_shard, tslot = placed
+        if improve_only and loads[tgt_shard] + w >= loads[src_shard]:
+            continue                   # the move would just relocate the peak
+        domain_of_slot[tslot] = d
+        domain_of_slot[slot] = -1
+        slot_of_domain[d] = tslot
+        loads[tgt_shard] += w
+        loads[src_shard] -= w
+        moves.append((d, src_shard, tgt_shard))
+    if not moves:
+        return dm, moves
+    return DomainMap(jnp.asarray(slot_of_domain), jnp.asarray(domain_of_slot),
+                     dm.shard_alive), moves
+
+
+def migrate_rows(arrs, old_map: DomainMap, new_map: DomainMap, *,
+                 rows: Sequence[str] | None = None):
     """Permute row-indexed state (frontier/bloom leaves) after a remap.
 
     For every new slot, pull the row of the slot its domain used to occupy.
     jittable — under pjit this is a gather across the sharded row axis (real
-    migration traffic)."""
+    migration traffic).
+
+    ``rows`` names the dict keys that are row-indexed (leading axis =
+    n_slots) and should be permuted; every other entry passes through
+    untouched. With ``rows=None`` (dict or any pytree) EVERY leaf must be
+    row-indexed — a leaf whose leading axis merely happens to equal
+    ``n_slots`` would otherwise be silently scrambled, so a non-row leaf
+    raises instead of guessing."""
     n_slots = old_map.domain_of_slot.shape[0]
     dom = new_map.domain_of_slot                          # (n_slots,)
     src = jnp.where(dom >= 0,
                     old_map.slot_of_domain[jnp.clip(dom, 0)],
                     jnp.arange(n_slots))
-    return jax.tree.map(lambda a: a[src] if a.ndim >= 1 and a.shape[0] == n_slots else a,
-                        arrs)
+    if rows is not None:
+        out = dict(arrs)
+        for k in rows:
+            a = out[k]
+            if a.ndim < 1 or a.shape[0] != n_slots:
+                raise ValueError(
+                    f"migrate_rows: leaf {k!r} has shape {a.shape}, not "
+                    f"row-indexed by n_slots={n_slots}")
+            out[k] = a[src]
+        return out
+
+    def gather(a):
+        if a.ndim < 1 or a.shape[0] != n_slots:
+            raise ValueError(
+                f"migrate_rows: leaf of shape {a.shape} is not row-indexed "
+                f"by n_slots={n_slots}; pass rows=(...) to name the "
+                f"row-indexed subset explicitly")
+        return a[src]
+
+    return jax.tree.map(gather, arrs)
 
 
 # ---------------------------------------------------------------------------

@@ -64,6 +64,15 @@ def main(argv=None):
     ap.add_argument("--fail-shard", type=int, default=-1)
     ap.add_argument("--fail-at", type=int, default=-1)
     ap.add_argument("--heal-at", type=int, default=-1)
+    ap.add_argument("--rebalance-threshold", type=float, default=0.0,
+                    metavar="X",
+                    help="arm load-driven elastic repartitioning (DESIGN.md "
+                         "§18): when the windowed load-imbalance factor "
+                         "(max/mean frontier depth over live shards) exceeds "
+                         "X at a dispatch boundary, migrate the hottest "
+                         "domains off the peak shard live->live; <=0 "
+                         "disables; implies --trace (the ledger is the "
+                         "trigger signal)")
     ap.add_argument("--trace", action="store_true",
                     help="enable telemetry (repro.obs): per-shard load "
                          "ledger + span tracing; prints the per-interval "
@@ -72,7 +81,8 @@ def main(argv=None):
                     help="write the Chrome trace_event file (.json or "
                          ".jsonl) with the ledger embedded; implies --trace")
     args = ap.parse_args(argv)
-    trace = args.trace or bool(args.trace_out)
+    trace = args.trace or bool(args.trace_out) or \
+        args.rebalance_threshold > 0
 
     cfg = scaled(get_arch("webparf")[0], n_domains=args.domains,
                  frontier_capacity=args.capacity, fetch_batch=args.fetch_batch,
@@ -81,7 +91,8 @@ def main(argv=None):
                  url_space_log2=24, partitioning=args.partitioning,
                  ordering=args.ordering, kernel_impl=args.kernel_impl,
                  coordination=args.coordination, comm_quota=args.comm_quota,
-                 telemetry=trace)
+                 telemetry=trace,
+                 rebalance_threshold=args.rebalance_threshold)
     from repro.core import stages as ST
     extra = []
     if args.politeness >= 0:
@@ -151,6 +162,12 @@ def main(argv=None):
           f"pages ({oq['hot_pages']} hubs), coverage AUC "
           f"{oq['coverage_auc']:.3f}")
     print("stats:", sd)
+    if sess.rebalance_events:
+        print(f"elastic rebalance: {len(sess.rebalance_events)} migrations")
+        for ev in sess.rebalance_events:
+            print(f"  step {ev.step:4d}: domains {list(ev.domains)} moved "
+                  f"(trigger {ev.trigger:.2f}, imbalance "
+                  f"{ev.imbalance_before:.2f} -> {ev.imbalance_after:.2f})")
 
     if trace:
         from repro.launch.trace_report import render_report

@@ -58,8 +58,20 @@ class CrawlTelemetry:
 
     def per_interval(self) -> "CrawlTelemetry":
         """The dispatch-boundary records only — the
-        ``(n_intervals, n_shards, n_metrics)`` view of the time-series."""
-        mask = (self.steps % max(self.interval, 1)) == 0
+        ``(n_intervals, n_shards, n_metrics)`` view of the time-series.
+
+        Boundaries come from the ledger's ``dispatch`` column, written by
+        the snapshot as the exchange step actually ran — so the selection
+        stays correct for a session restored mid-interval or into a changed
+        ``dispatch_interval``, where a ``steps % interval == 0`` mask picks
+        non-boundary records (regression pinned in tests/test_obs.py).
+        Ledgers predating the column (old trace files) fall back to the
+        modulo mask."""
+        if "dispatch" in self.names:
+            # any live shard flags the record (dead lanes are zeroed)
+            mask = self.col("dispatch").max(axis=1, initial=0.0) > 0.0
+        else:
+            mask = (self.steps % max(self.interval, 1)) == 0
         return dataclasses.replace(self, steps=self.steps[mask],
                                    rows=self.rows[mask])
 

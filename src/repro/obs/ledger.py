@@ -56,6 +56,10 @@ LEDGER_BASE: Tuple[str, ...] = (
     "dispatch_recv",
     "coord_dropped",
     "coord_deferred",
+    "dispatch",         # 1.0 on records taken AFTER a dispatch step — the
+                        # boundary flag per_interval() selects by, correct
+                        # across restores into a different dispatch_interval
+                        # (a step-modulo mask is not; see health.py)
 )
 
 
@@ -65,10 +69,13 @@ def ledger_metrics(cfg: CrawlConfig) -> Tuple[str, ...]:
         f"queue_b{b}" for b in range(cfg.n_priority_buckets))
 
 
-def snapshot_local(cfg: CrawlConfig, axes, state: ST.CrawlState) -> jax.Array:
+def snapshot_local(cfg: CrawlConfig, axes, state: ST.CrawlState,
+                   dispatch=False) -> jax.Array:
     """One shard's ledger row, ``(1, n_metrics)`` f32 — shard-local, pure,
     jittable inside the scan. ``axes`` are the crawler mesh axis names
-    (``lax.axis_index`` recovers which shard this is)."""
+    (``lax.axis_index`` recovers which shard this is). ``dispatch`` flags
+    the record as a dispatch-boundary one (the step that just ran was the
+    interval's exchange step) — a python bool or traced scalar."""
     view = ST.ledger_view(state)
     shard = lax.axis_index(axes).astype(jnp.int32)
     alive = view["shard_alive"][shard].astype(jnp.float32)
@@ -97,6 +104,7 @@ def snapshot_local(cfg: CrawlConfig, axes, state: ST.CrawlState) -> jax.Array:
         stat("dispatch_recv"),
         stat("coord_dropped"),
         stat("coord_deferred"),
+        jnp.asarray(dispatch, jnp.float32).reshape(()),
     ])
     occ = F.bucket_occupancy(fr.priority, fr.valid, cfg.n_priority_buckets)
     return (jnp.concatenate([row, occ]) * alive)[None]

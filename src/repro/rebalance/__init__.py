@@ -1,0 +1,12 @@
+"""Load-driven elastic repartitioning (DESIGN.md §18) — the rebalance-policy
+registry plus the typed decision/event records ``CrawlSession`` threads
+through ``CrawlReport.rebalances``."""
+from repro.rebalance.policy import (HOT_DOMAIN, RebalanceDecision,
+                                    RebalanceEvent, RebalancePolicy,
+                                    get_rebalance, rebalances,
+                                    register_rebalance)
+
+__all__ = [
+    "HOT_DOMAIN", "RebalanceDecision", "RebalanceEvent", "RebalancePolicy",
+    "get_rebalance", "rebalances", "register_rebalance",
+]

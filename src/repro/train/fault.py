@@ -86,12 +86,19 @@ def heal_crawler(state, cfg, dead_shards, n_shards: int):
     from repro.core import crawler as CR
     from repro.core import partitioner as PT
 
-    loads = np.asarray(state.f_valid.sum(axis=1))
+    loads = np.asarray(state.f_valid.sum(axis=1)).astype(np.float64)
     per = cfg.n_slots // n_shards
-    shard_loads = loads.reshape(n_shards, per).sum(axis=1).astype(np.float64)
+    shard_loads = loads.reshape(n_shards, per).sum(axis=1)
+    # per-domain weight in the SAME unit as shard_loads (frontier depth), so
+    # each placement credits what it actually adds — without this every
+    # orphan credited +1 and the balancer piled them all onto one survivor
+    # (floor of 1: an empty orphan still occupies a slot, so successive
+    # empty placements round-robin instead of piling on one survivor)
+    domain_loads = np.maximum(loads[np.asarray(state.slot_of_domain)], 1.0)
     dm = PT.DomainMap(state.slot_of_domain, state.slot_domain,
                       jnp.ones((n_shards,), bool))
-    new_dm = PT.rebalance(dm, list(dead_shards), loads=shard_loads)
+    new_dm = PT.rebalance(dm, list(dead_shards), loads=shard_loads,
+                          domain_loads=domain_loads)
     return CR.apply_rebalance(state, cfg, new_dm)
 
 

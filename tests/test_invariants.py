@@ -62,6 +62,10 @@ KERNEL_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "auto")
 # adds a "batched" cell); a small quota forces the outbox to actually carry
 COORDINATION = os.environ.get("REPRO_COORDINATION", "exchange")
 FUSED = os.environ.get("REPRO_FUSED_DISPATCH", "1") != "0"
+# REPRO_REBALANCE=1 arms the elastic rebalancer on every session (threshold
+# 0.5 fires the trigger at every boundary; single-shard plans decline, so
+# this exercises the control-plane path live through every schedule)
+REBALANCE = os.environ.get("REPRO_REBALANCE", "0") == "1"
 
 COMBOS = [(o, p) for o in orderings() for p in PT.policies()]
 
@@ -89,6 +93,9 @@ def _session(ordering: str, partitioning: str,
                      coordination=coordination,
                      comm_quota=6 if coordination == "batched" else -1,
                      link_pop_bias=1.0, fused_dispatch=FUSED)
+        if REBALANCE:
+            cfg = scaled(cfg, telemetry=True, rebalance_threshold=0.5,
+                         rebalance_window=1)
         _SESSIONS[key] = CrawlSession(cfg, _MESH)
     return _SESSIONS[key].reset()
 
@@ -134,7 +141,11 @@ def _apply_op(sess: CrawlSession, op: int, tmp: str) -> str:
     """One schedule op. 0: single step; 1: run through the next dispatch
     boundary; 2: kill shard 0 / revive whatever is dead (toggles, so every
     schedule exercises dead-shard give-backs AND recovery); 3: checkpoint at
-    the CURRENT (arbitrary) step, advance, restore back."""
+    the CURRENT (arbitrary) step, advance, restore back; 4: live-live
+    elastic move — remap the deepest mapped domain into a free slot on a
+    live shard through the same apply_rebalance machinery the load-driven
+    policy uses (DESIGN.md §18), exercising vacated-row clearing and the
+    displaced-row refund under every partitioning/ordering combo."""
     iv = sess.cfg.dispatch_interval
     if op == 0:
         sess.run(1)
@@ -149,6 +160,28 @@ def _apply_op(sess: CrawlSession, op: int, tmp: str) -> str:
             return "fail(0)"
         sess.state = revive(sess.state, list(np.flatnonzero(~alive)))
         return "revive"
+    if op == 4:
+        from repro.core import crawler as CR
+        state = sess.state
+        dos = np.asarray(state.slot_domain)
+        sod = np.asarray(state.slot_of_domain)
+        alive = np.asarray(state.shard_alive)
+        per = len(dos) // len(alive)
+        free = np.flatnonzero((dos < 0) &
+                              alive[np.arange(len(dos)) // per])
+        # only primary slots move (merged domains share a row)
+        mapped = np.flatnonzero((dos >= 0) & (sod[np.clip(dos, 0, None)] ==
+                                              np.arange(len(dos))))
+        if len(free) == 0 or len(mapped) == 0:
+            return "migrate(noop)"
+        depth = np.asarray(state.f_valid).sum(axis=1)
+        slot = int(mapped[np.argmax(depth[mapped])])
+        d, tgt = int(dos[slot]), int(free[0])
+        dm = PT.DomainMap(state.slot_of_domain, state.slot_domain,
+                          state.shard_alive)
+        sess.state = CR.apply_rebalance(state, sess.cfg,
+                                        PT.move_domain(dm, d, tgt))
+        return f"migrate(d{d}->slot{tgt})"
     before_t = sess.t
     sess.checkpoint(tmp)
     sess.run(1)
@@ -161,7 +194,7 @@ def _apply_op(sess: CrawlSession, op: int, tmp: str) -> str:
 @pytest.mark.parametrize("ordering,partitioning", COMBOS,
                          ids=[f"{o}-{p}" for o, p in COMBOS])
 @settings(max_examples=3, deadline=None)
-@given(st.lists(st.integers(0, 3), min_size=1, max_size=6))
+@given(st.lists(st.integers(0, 4), min_size=1, max_size=6))
 def test_random_schedule_conserves_cash_and_ownership(
         ordering, partitioning, ops):
     sess = _session(ordering, partitioning)
@@ -184,7 +217,7 @@ def test_initial_states_satisfy_invariants():
 @pytest.mark.parametrize("coordination,ordering", COORD_COMBOS,
                          ids=[f"{c}-{o}" for c, o in COORD_COMBOS])
 @settings(max_examples=3, deadline=None)
-@given(st.lists(st.integers(0, 3), min_size=1, max_size=6))
+@given(st.lists(st.integers(0, 4), min_size=1, max_size=6))
 def test_random_schedule_conserves_cash_per_coordination_mode(
         coordination, ordering, ops):
     """Firewall refunds, crossover keeps, batched parks in the outbox — all
@@ -349,6 +382,36 @@ MULTI_SHARD_INVARIANTS = textwrap.dedent("""
         check_invariants(sess, c0, tag + " healed")
         sess.run(iv)
         check_invariants(sess, c0, tag + " post-heal")
+
+    # load-driven ELASTIC repartitioning on 4 healthy shards (DESIGN.md §18):
+    # a Zipf-skewed preferential-attachment web piles load onto shard 0, the
+    # ledger trigger fires, hot domains migrate live->live — and the moved
+    # layout must then survive a fail -> heal cycle on top (the elastic map
+    # is what the C4 machinery now inherits)
+    cfg = scaled(get_reduced("webparf"), ordering="opic_url",
+                 link_pop_bias=1.0, zipf_a=1.8, topical_locality=0.5,
+                 telemetry=True, rebalance_threshold=1.05,
+                 rebalance_window=1, rebalance_max_domains=2,
+                 kernel_impl=os.environ["REPRO_KERNEL_IMPL"])
+    sess = CrawlSession(cfg)
+    iv = cfg.dispatch_interval
+    c0 = total_cash(sess.state)
+    tag = "elastic/opic_url"
+    sess.run(6 * iv)
+    assert len(sess.rebalance_events) > 0, \
+        (tag, "skewed web never tripped the rebalance trigger")
+    moved = {d for ev in sess.rebalance_events for d in ev.domains}
+    assert moved, (tag, "events carry no migrated domains")
+    check_invariants(sess, c0, tag + " post-migrate")
+    for ev in sess.rebalance_events:
+        assert ev.trigger > cfg.rebalance_threshold, (tag, ev)
+    sess.inject_failure(2)
+    sess.run(iv)
+    check_invariants(sess, c0, tag + " dead")
+    sess.heal()
+    check_invariants(sess, c0, tag + " healed")
+    sess.run(2 * iv)
+    check_invariants(sess, c0, tag + " post-heal")
     print("multi-shard invariants: OK")
 """) % (KERNEL_IMPL,)
 

@@ -189,6 +189,34 @@ def test_health_metrics_finite(base_cfg):
     assert "telemetry:" in tel.summary()
 
 
+def test_per_interval_boundaries_survive_interval_change(base_cfg, tmp_path):
+    """per_interval() must select the records where a dispatch actually ran.
+    A checkpoint taken under dispatch_interval=4 restored into an
+    interval=3 session puts real boundaries at steps {4, 8, 9, 12} — the
+    old ``steps % interval == 0`` mask picked {3, 6, 9, 12}: two
+    non-boundary records in, two real boundaries out."""
+    cfg4 = scaled(base_cfg, telemetry=True, dispatch_interval=4)
+    sess = CrawlSession(cfg4)
+    sess.run(8)
+    sess.checkpoint(str(tmp_path))
+
+    cfg3 = scaled(cfg4, dispatch_interval=3)
+    s2 = CrawlSession(cfg3)
+    s2.restore(str(tmp_path))
+    s2.run(6)                          # dispatches land at steps 9 and 12
+    tel = s2.telemetry_report()
+    np.testing.assert_array_equal(tel.per_interval().steps, [4, 8, 9, 12])
+
+    # ledgers predating the boundary column (old trace files) fall back to
+    # the modulo mask instead of crashing
+    import dataclasses
+    i = tel.names.index("dispatch")
+    legacy = dataclasses.replace(
+        tel, names=tel.names[:i] + tel.names[i + 1:],
+        rows=np.delete(tel.rows, i, axis=2))
+    np.testing.assert_array_equal(legacy.per_interval().steps, [3, 6, 9, 12])
+
+
 def test_serve_telemetry(base_cfg):
     """ServeSession threads the crawl ledger + serve spans through to
     ServeReport.telemetry; freshness lag lands in the flat metrics."""

@@ -66,6 +66,38 @@ def test_rebalance_respects_load(cfg):
     assert set(orphans) <= {2, 3}
 
 
+def test_rebalance_credits_domain_loads(cfg):
+    """The unit-mixing regression: with depth-scale ``loads`` the old +1
+    placement credit never caught up to the survivors' real loads, so every
+    orphan of a dead shard piled onto the single least-loaded survivor.
+    Crediting each placed domain's own load spreads them."""
+    dm = PT.identity_map(cfg, N_SHARDS)
+    per_dom = cfg.n_domains // N_SHARDS      # 2 domains per shard
+    # shard 1 dies; shards 2 and 3 are near-equal and far below shard 0
+    loads = np.array([500.0, 0.0, 10.0, 12.0])
+    domain_loads = np.full(cfg.n_domains, 100.0)
+    dm2 = PT.rebalance(dm, [1], loads=loads, domain_loads=domain_loads)
+    owners = shard_of_domain(dm2, cfg)
+    orphans = owners[1 * per_dom:(1 + 1) * per_dom]
+    # heavy orphans spread over BOTH cold survivors (old behavior: all on 2)
+    assert sorted(orphans) == [2, 3], orphans
+
+
+def test_rebalance_spreads_many_domains_by_load(cfg):
+    """>2 orphans with real weights: placements interleave across survivors
+    instead of piling up (the satellite's spread assertion)."""
+    dm = PT.identity_map(cfg, N_SHARDS)
+    dm2 = PT.rebalance(dm, [0, 1],
+                       loads=np.array([0.0, 0.0, 5.0, 6.0]),
+                       domain_loads=np.full(cfg.n_domains, 50.0))
+    owners = shard_of_domain(dm2, cfg)
+    per_dom = cfg.n_domains // N_SHARDS
+    orphans = owners[:2 * per_dom]           # 4 migrated domains
+    counts = np.bincount(orphans, minlength=N_SHARDS)
+    assert counts[0] == counts[1] == 0
+    assert counts[2] == counts[3] == 2, counts
+
+
 # ---------------------------------------------------------------------------
 # migrate_rows round-trip
 # ---------------------------------------------------------------------------
@@ -77,10 +109,10 @@ def test_migrate_rows_out_and_back_is_identity(cfg):
     arrs = dict(
         a=jnp.asarray(rng.random((cfg.n_slots, 5)), jnp.float32),
         b=jnp.asarray(rng.integers(0, 99, (cfg.n_slots,)), jnp.int32),
-        scalar=jnp.asarray(3),               # non-row leaves pass through
+        scalar=jnp.asarray(3),               # named rows= leave it untouched
     )
-    out = PT.migrate_rows(arrs, dm, dm2)
-    back = PT.migrate_rows(out, dm2, dm)
+    out = PT.migrate_rows(arrs, dm, dm2, rows=("a", "b"))
+    back = PT.migrate_rows(out, dm2, dm, rows=("a", "b"))
     # every domain-bearing row returns to its original slot bit-for-bit
     # (unmapped spare slots may hold stale copies — they carry no queue)
     for d in range(cfg.n_domains):
@@ -90,6 +122,88 @@ def test_migrate_rows_out_and_back_is_identity(cfg):
                                           np.asarray(arrs[k][s]),
                                           err_msg=f"domain {d} leaf {k}")
     assert int(back["scalar"]) == 3
+
+
+def test_migrate_rows_decoy_leaf_not_scrambled(cfg):
+    """The shape-heuristic regression: a coincidentally ``(n_slots,)``-sized
+    NON-row leaf must pass through untouched when ``rows=`` names the real
+    row set — the old shape match silently permuted it."""
+    dm = PT.identity_map(cfg, N_SHARDS)
+    dm2 = PT.rebalance(dm, [1])
+    decoy = jnp.arange(cfg.n_slots, dtype=jnp.int32)     # e.g. a per-shard
+    rows = jnp.arange(cfg.n_slots, dtype=jnp.float32)    # histogram, not rows
+    out = PT.migrate_rows(dict(rows=rows, decoy=decoy), dm, dm2,
+                          rows=("rows",))
+    np.testing.assert_array_equal(np.asarray(out["decoy"]),
+                                  np.asarray(decoy),
+                                  err_msg="decoy leaf was permuted")
+    assert not np.array_equal(np.asarray(out["rows"]), np.asarray(rows))
+
+
+def test_migrate_rows_rejects_non_row_leaf(cfg):
+    """Without rows=, every leaf must be row-indexed — no silent guessing."""
+    dm = PT.identity_map(cfg, N_SHARDS)
+    dm2 = PT.rebalance(dm, [1])
+    with pytest.raises(ValueError, match="not row-indexed"):
+        PT.migrate_rows(dict(bad=jnp.zeros(3)), dm, dm2)
+    with pytest.raises(ValueError, match="not row-indexed"):
+        PT.migrate_rows(dict(bad=jnp.zeros(3)), dm, dm2, rows=("bad",))
+
+
+# ---------------------------------------------------------------------------
+# live->live elastic moves (repro.rebalance consumes these primitives)
+# ---------------------------------------------------------------------------
+
+def test_move_domain_basic_and_errors(cfg):
+    dm = PT.identity_map(cfg, N_SHARDS)
+    free = int(np.flatnonzero(np.asarray(dm.domain_of_slot) < 0)[0])
+    dm2 = PT.move_domain(dm, 0, free)
+    assert int(np.asarray(dm2.slot_of_domain)[0]) == free
+    assert int(np.asarray(dm2.domain_of_slot)[free]) == 0
+    old = int(np.asarray(dm.slot_of_domain)[0])
+    assert int(np.asarray(dm2.domain_of_slot)[old]) == -1
+    occupied = int(np.asarray(dm.slot_of_domain)[1])
+    with pytest.raises(ValueError, match="occupied"):
+        PT.move_domain(dm, 0, occupied)
+
+
+def test_migrate_domains_spreads_and_limits(cfg):
+    dm = PT.identity_map(cfg, N_SHARDS)
+    per_dom = cfg.n_domains // N_SHARDS
+    hot = list(range(per_dom))               # shard 0's domains
+    loads = np.array([200.0, 10.0, 12.0, 11.0])
+    domain_loads = np.full(cfg.n_domains, 100.0)
+    dm2, moves = PT.migrate_domains(dm, hot, loads=loads,
+                                    domain_loads=domain_loads)
+    assert len(moves) == len(hot)
+    # least-loaded first, then spread: targets differ
+    assert len({t for _, _, t in moves}) == 2
+    assert all(s == 0 for _, s, _ in moves)
+    owners = shard_of_domain(dm2, cfg)
+    assert 0 not in owners[hot]
+    # liveness unchanged, limit respected
+    np.testing.assert_array_equal(np.asarray(dm2.shard_alive),
+                                  np.asarray(dm.shard_alive))
+    _, moves1 = PT.migrate_domains(dm, hot, loads=loads,
+                                   domain_loads=domain_loads, limit=1)
+    assert len(moves1) == 1
+
+
+def test_migrate_domains_improve_only_skips_peak_swaps(cfg):
+    """A move that would just relocate the peak (or nothing profitable at
+    all) yields no moves and returns the ORIGINAL map object."""
+    dm = PT.identity_map(cfg, N_SHARDS)
+    loads = np.array([100.0, 90.0, 95.0, 92.0])
+    heavy = np.full(cfg.n_domains, 100.0)    # any move makes the target peak
+    dm2, moves = PT.migrate_domains(dm, [0, 1], loads=loads,
+                                    domain_loads=heavy, improve_only=True)
+    assert moves == [] and dm2 is dm
+
+
+def test_migrate_domains_single_live_shard_noop(cfg):
+    dm = PT.rebalance(PT.identity_map(cfg, N_SHARDS), [0, 1, 2])
+    dm2, moves = PT.migrate_domains(dm, [0], loads=np.zeros(N_SHARDS))
+    assert moves == [] and dm2 is dm
 
 
 def test_migrate_rows_moves_dead_rows_to_new_owner(cfg):
